@@ -1,0 +1,31 @@
+"""Paper Fig. 10 analogue: percentage of tensors falling back to BF16 per
+partition strategy (fwd + bwd events), from live training decisions."""
+from __future__ import annotations
+
+from repro.core import paper_default
+
+from .common import csv_row, run_quality
+
+
+def main(steps: int = 120):
+    rows = []
+    results = []
+    for name, part in (
+        ("block", "block"), ("tensor", "tensor"), ("channel", "channel")
+    ):
+        r = run_quality(paper_default(partition=part), name, steps=steps)
+        results.append(r)
+        rows.append(
+            csv_row(
+                f"fig10/{name}",
+                r.seconds * 1e6 / max(steps, 1),
+                f"fwd_bf16={r.fwd_bf16_pct:.2f}%;bwd_bf16="
+                f"{r.bwd_bf16_pct:.2f}%",
+            )
+        )
+    return rows, results
+
+
+if __name__ == "__main__":
+    for row in main()[0]:
+        print(row)

@@ -1,0 +1,79 @@
+"""Paper Fig. 11 analogue: per-tensor relative-error histograms (0.5%-wide
+bins, ASCII heat rows) collected from a short training run with per-layer
+per-event stats streamed out of the train step."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MoRStatsTracker, paper_default
+from repro.data import DataConfig, SyntheticLM
+from repro.models import init_params, make_loss_fn, make_tokens
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+from .common import BATCH, SEQ, VOCAB, bench_model_cfg, csv_row
+
+
+def main(steps: int = 60):
+    cfg = bench_model_cfg()
+    policy = paper_default(partition="block")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    loss_fn = make_loss_fn(cfg, policy)
+    grad_fn = jax.jit(
+        jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
+    )
+    ocfg = AdamWConfig(peak_lr=3e-3, final_lr=3e-4, warmup_steps=10,
+                       total_steps=steps)
+    data = SyntheticLM(
+        DataConfig(vocab=VOCAB, seq_len=SEQ, global_batch=BATCH, seed=7)
+    )
+    tracker = MoRStatsTracker(reset_every=0)
+    tokens = make_tokens(cfg)
+
+    t0 = time.time()
+    for s in range(steps):
+        batch = jax.tree.map(jnp.asarray, data.batch_at(s))
+        (_, aux), (g_params, g_tokens) = grad_fn(params, tokens, batch)
+        params, opt, _ = adamw_update(ocfg, g_params, opt)
+        named = {}
+        for t, dots in aux["mor_fwd"]["blocks"].items():
+            for dot, st in dots.items():
+                if not hasattr(st, "ndim"):
+                    continue
+                arr = np.asarray(st)
+                for layer in range(arr.shape[0]):
+                    rows = arr[layer].reshape(-1, arr.shape[-1])
+                    for ev, rowname in enumerate(("act", "weight")):
+                        if ev < rows.shape[0]:
+                            named[
+                                f"layer.{layer}.{dot}.{rowname}"
+                            ] = rows[ev]
+        for t, dots in g_tokens["blocks"].items():
+            for dot, st in dots.items():
+                arr = np.asarray(st)
+                for layer in range(arr.shape[0]):
+                    named[f"layer.{layer}.{dot}.grad"] = arr[layer].reshape(
+                        -1, arr.shape[-1]
+                    )[0]
+        tracker.update(named, s)
+    dt = time.time() - t0
+
+    heat = tracker.render_heatmap(limit=40)
+    print(heat)
+    row = csv_row(
+        "fig11/heatmap",
+        dt * 1e6 / max(steps, 1),
+        f"tensors={len(tracker.hists)};fallback="
+        f"{tracker.bf16_fallback_pct:.2f}%",
+    )
+    return [row], heat
+
+
+if __name__ == "__main__":
+    for row in main()[0]:
+        print(row)

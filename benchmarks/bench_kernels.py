@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: wall time per call on this host (CPU: the jnp
+reference / interpret paths; on a TPU host the same harness times the
+Pallas kernels) + derived bandwidth."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import E4M3, PER_BLOCK_128, MoRPolicy, mor_quantize
+from repro.core.partition import Partition
+from repro.kernels import ref as kref
+from repro.kernels.ops import gam_quant
+
+from .common import csv_row
+
+
+def _time(fn, *args, iters=10):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def main():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # Fused mor_quantize (the XLA lowering used in train steps).
+    for mkn in ((1024, 1024), (4096, 1024)):
+        x = jnp.asarray(rng.standard_normal(mkn), jnp.bfloat16)
+        pol = MoRPolicy(recipe="tensor", partition="block")
+        f = jax.jit(lambda a: mor_quantize(a, pol)[0])
+        us = _time(f, x)
+        gbps = x.size * 2 * 2 / (us * 1e-6) / 1e9
+        rows.append(
+            csv_row(f"kernel/mor_quantize_{mkn[0]}x{mkn[1]}", us,
+                    f"GB/s={gbps:.1f}")
+        )
+
+    # gam_quant pallas kernel (interpret mode on CPU).
+    x = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    us = _time(
+        lambda a: gam_quant(a, backend="interpret")[0], x, iters=3
+    )
+    rows.append(csv_row("kernel/gam_quant_interp_512", us, "mode=interpret"))
+    us = _time(lambda a: gam_quant(a, backend="xla")[0], x)
+    rows.append(csv_row("kernel/gam_quant_xla_512", us, "mode=xla-ref"))
+
+    # flash attention reference vs model chunked attention.
+    from repro.models.attention import flash_attention as xla_flash
+
+    q = jnp.asarray(rng.standard_normal((2, 512, 4, 64)), jnp.bfloat16)
+    f = jax.jit(
+        lambda a: xla_flash(a, a, a, kind="causal", q_chunk=128,
+                            k_chunk=128)
+    )
+    us = _time(f, q)
+    flops = 4 * 2 * 512 * 512 * 4 * 64  # 2 gemms, causal not discounted
+    rows.append(
+        csv_row("kernel/chunked_attention_b2s512", us,
+                f"GFLOP/s={flops / (us * 1e-6) / 1e9:.1f}")
+    )
+    return rows, None
+
+
+if __name__ == "__main__":
+    for row in main()[0]:
+        print(row)

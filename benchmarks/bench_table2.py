@@ -1,0 +1,37 @@
+"""Paper Table 2 analogue: tensor-level MoR across partition strategies
+(BF16 baseline vs per-block 128x128 / per-tensor / per-channel), final
+train + validation losses. Claim under test: all MoR variants land within
+~0.5-1% of the BF16 baseline loss."""
+from __future__ import annotations
+
+from repro.core import BF16_BASELINE, paper_default
+
+from .common import csv_row, run_quality
+
+
+def main(steps: int = 150):
+    configs = [
+        ("bf16", BF16_BASELINE),
+        ("mor_block", paper_default(partition="block")),
+        ("mor_tensor", paper_default(partition="tensor")),
+        ("mor_channel", paper_default(partition="channel")),
+    ]
+    results = [run_quality(p, n, steps=steps) for n, p in configs]
+    base = results[0]
+    rows = []
+    for r in results:
+        delta = (r.train_loss - base.train_loss) / base.train_loss * 100
+        rows.append(
+            csv_row(
+                f"table2/{r.name}",
+                r.seconds * 1e6 / max(steps, 1),
+                f"train={r.train_loss:.4f};val={r.val_loss:.4f};"
+                f"dtrain={delta:+.2f}%;fwd_bf16={r.fwd_bf16_pct:.1f}%",
+            )
+        )
+    return rows, results
+
+
+if __name__ == "__main__":
+    for row in main()[0]:
+        print(row)

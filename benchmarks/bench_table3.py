@@ -1,0 +1,36 @@
+"""Paper Table 3 analogue: MoR setting ablations on the per-block strategy:
+block 64x64 vs 128x128, threshold 5.0% vs 4.5%, and scaling-algorithm
+comparison (GAM vs per-block FP32-amax vs per-block E8M0). Claim under
+test: mantissa-consistent scaling (GAM/E8M0) tracks BF16; all variants
+stay within ~1% train loss."""
+from __future__ import annotations
+
+from repro.core import paper_default
+
+from .common import csv_row, run_quality
+
+
+def main(steps: int = 150):
+    configs = [
+        ("block128", paper_default(partition="block")),
+        ("block64", paper_default(partition="block", block_shape=(64, 64))),
+        ("th5.0", paper_default(partition="block", threshold=0.05)),
+        ("fp32_amax", paper_default(partition="block", algo="fp32_amax")),
+        ("e8m0", paper_default(partition="block", algo="e8m0")),
+    ]
+    results = [run_quality(p, n, steps=steps) for n, p in configs]
+    rows = [
+        csv_row(
+            f"table3/{r.name}",
+            r.seconds * 1e6 / max(steps, 1),
+            f"train={r.train_loss:.4f};val={r.val_loss:.4f};"
+            f"fwd_bf16={r.fwd_bf16_pct:.1f}%;rel_err={r.fwd_rel_err:.4f}",
+        )
+        for r in results
+    ]
+    return rows, results
+
+
+if __name__ == "__main__":
+    for row in main()[0]:
+        print(row)

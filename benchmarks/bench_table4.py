@@ -1,0 +1,33 @@
+"""Paper Table 4 analogue: sub-tensor MoR recipes at 128x128 blocks --
+Two-Way (E4M3/BF16) vs Three-Way (E4M3/E5M2/BF16) selection vs BF16.
+Claim under test: two-way preserves quality; three-way reaches lower
+train/val loss (the paper's overfitting signature shows as lower loss)."""
+from __future__ import annotations
+
+from repro.core import BF16_BASELINE, paper_default
+
+from .common import csv_row, run_quality
+
+
+def main(steps: int = 150):
+    configs = [
+        ("bf16", BF16_BASELINE),
+        ("two_way", paper_default("sub2")),
+        ("three_way", paper_default("sub3")),
+    ]
+    results = [run_quality(p, n, steps=steps) for n, p in configs]
+    rows = [
+        csv_row(
+            f"table4/{r.name}",
+            r.seconds * 1e6 / max(steps, 1),
+            f"train={r.train_loss:.4f};val={r.val_loss:.4f};"
+            f"e4m3_blocks={100 - r.fwd_bf16_pct:.1f}%",
+        )
+        for r in results
+    ]
+    return rows, results
+
+
+if __name__ == "__main__":
+    for row in main()[0]:
+        print(row)

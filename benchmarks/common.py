@@ -1,0 +1,113 @@
+"""Shared harness for the paper-quality benchmarks (Tables 2-4, Figs 10-11).
+
+Trains a reduced Nemotron-3-family model (dense, squared-ReLU -- the
+paper's experiment model) on the deterministic synthetic stream under a
+given MoR policy, and reports train/validation loss plus MoR decision
+statistics. CPU-feasible stand-in for the paper's 8B/1T-token runs; the
+comparisons (MoR variant vs BF16 baseline) mirror the paper's tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import MoRDotPolicy
+from repro.data import DataConfig, SyntheticLM
+from repro.models import make_loss_fn, make_tokens, init_params
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.train import TrainConfig, make_train_step
+
+VOCAB = 256
+SEQ = 128
+BATCH = 8
+
+
+def bench_model_cfg():
+    cfg = reduced(get_config("nemotron3-8b"))
+    return dataclasses.replace(
+        cfg, name="nemotron3-bench", vocab=VOCAB, d_model=128, n_layers=2,
+        n_heads=4, n_kv=4, head_dim=32, d_ff=384,
+    )
+
+
+@dataclasses.dataclass
+class QualityResult:
+    name: str
+    train_loss: float
+    val_loss: float
+    fwd_bf16_pct: float
+    bwd_bf16_pct: float
+    fwd_rel_err: float
+    seconds: float
+    losses: List[float]
+    history: List[Dict[str, float]]
+
+
+def run_quality(
+    policy: MoRDotPolicy,
+    name: str,
+    steps: int = 150,
+    seed: int = 0,
+    collect_stats_every: int = 1,
+) -> QualityResult:
+    cfg = bench_model_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = init_opt_state(params)
+    step_fn = jax.jit(
+        make_train_step(
+            cfg, policy,
+            TrainConfig(optimizer=AdamWConfig(
+                peak_lr=3e-3, final_lr=3e-4, warmup_steps=20,
+                total_steps=steps,
+            )),
+        )
+    )
+    data = SyntheticLM(
+        DataConfig(vocab=VOCAB, seq_len=SEQ, global_batch=BATCH, seed=7)
+    )
+    val_batch = jax.tree.map(jnp.asarray, data.batch_at(10_000))
+    loss_fn = jax.jit(make_loss_fn(cfg, policy, remat=False))
+    tokens = make_tokens(cfg)
+
+    t0 = time.time()
+    losses, history = [], []
+    for s in range(steps):
+        batch = jax.tree.map(jnp.asarray, data.batch_at(s))
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+        if s % collect_stats_every == 0:
+            history.append(
+                {
+                    "step": s,
+                    "loss": losses[-1],
+                    "fwd_bf16": float(m.get("fwd_frac_bf16", 0.0)),
+                    "bwd_bf16": float(m.get("bwd_frac_bf16", 0.0)),
+                    "fwd_rel_err": float(m.get("fwd_rel_err", 0.0)),
+                }
+            )
+    val_loss, _ = loss_fn(params, tokens, val_batch)
+    dt = time.time() - t0
+    fwd = float(np.mean([h["fwd_bf16"] for h in history[5:]])) * 100
+    bwd = float(np.mean([h["bwd_bf16"] for h in history[5:]])) * 100
+    err = float(np.mean([h["fwd_rel_err"] for h in history[5:]]))
+    return QualityResult(
+        name=name,
+        train_loss=float(np.mean(losses[-10:])),
+        val_loss=float(val_loss),
+        fwd_bf16_pct=fwd,
+        bwd_bf16_pct=bwd,
+        fwd_rel_err=err,
+        seconds=dt,
+        losses=losses,
+        history=history,
+    )
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,70 @@
+"""Roofline report: reads the dry-run JSONs (experiments/dryrun/*.json)
+and prints the per-cell three-term table (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import csv_row
+
+DRYRUN_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "dryrun",
+)
+
+
+def load_cells(directory: str = DRYRUN_DIR):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def main():
+    rows = []
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    if not cells:
+        rows.append(csv_row("roofline/none", 0.0,
+                            "run repro.launch.dryrun --all first"))
+        return rows, None
+    header = (
+        f"{'arch':24s} {'shape':12s} {'mesh':8s} {'compute':>9s} "
+        f"{'memory':>9s} {'collective':>11s} {'dominant':>10s} "
+        f"{'useful':>7s} {'fits':>5s}"
+    )
+    print(header)
+    print("-" * len(header))
+    for c in ok:
+        r = c["roofline"]
+        print(
+            f"{c['arch']:24s} {c['shape']:12s} {c['mesh']:8s} "
+            f"{r['compute_s']:9.3f} {r['memory_s']:9.3f} "
+            f"{r['collective_s']:11.3f} {r['dominant']:>10s} "
+            f"{r['useful_flops_ratio']:7.2f} "
+            f"{str(c['memory']['fits_16gb']):>5s}"
+        )
+        rows.append(
+            csv_row(
+                f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+                max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+                f"dominant={r['dominant']};useful="
+                f"{r['useful_flops_ratio']:.2f};"
+                f"fits={c['memory']['fits_16gb']}",
+            )
+        )
+    skips = [c for c in cells if c.get("status") == "skip"]
+    for c in skips:
+        rows.append(
+            csv_row(
+                f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}", 0.0,
+                "skip:" + c.get("reason", "")[:60],
+            )
+        )
+    return rows, None
+
+
+if __name__ == "__main__":
+    main()

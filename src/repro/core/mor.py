@@ -1,0 +1,222 @@
+"""The MoR framework (Algorithm 2) and the paper's concrete recipes.
+
+Entry point: :func:`mor_quantize` -- fake-quantize a 2-D operand view under a
+:class:`~repro.core.policy.MoRPolicy`, returning the (possibly passthrough)
+tensor plus a fixed-size stats vector. Everything is functional and jittable:
+dynamic decisions are data-dependent *selects*, exactly matching the paper's
+fake-quantization workflow (Fig. 4) where both representations exist
+transiently and one is chosen from live numerics.
+
+Stats vector layout (f32, STATS_WIDTH):
+  [0] decision        1.0 if the preferred low-precision type was accepted
+                      (tensor-level), or fraction of blocks in E4M3 (sub-*).
+  [1] rel_err         global mean relative error of the E4M3 candidate.
+  [2] amax            group (tensor) absolute maximum.
+  [3] frac_e4m3       fraction of blocks quantized to E4M3.
+  [4] frac_e5m2       fraction of blocks quantized to E5M2 (sub3 only).
+  [5] frac_bf16       fraction of blocks left in BF16.
+  [6] nonzero_frac    fraction of non-zero elements.
+  [7] group_mantissa  m_g of the GAM scale.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from .formats import E4M3, E5M2, FormatSpec, cast_to_format
+from .gam import GamScales, compute_scales, scales_from_bmax
+from .metrics import (
+    E5M2_RANGE_RATIO,
+    block_dynamic_range_ok,
+    block_relative_error_sums,
+    relative_error,
+)
+from .partition import Partition, from_blocks, to_blocks
+from .policy import MoRPolicy
+
+__all__ = [
+    "STATS_WIDTH",
+    "quant_dequant",
+    "quant_dequant_with_scales",
+    "mor_quantize",
+    "partition_of",
+]
+
+STATS_WIDTH = 8
+
+
+def partition_of(policy: MoRPolicy) -> Partition:
+    return Partition(
+        kind=policy.partition, block_shape=policy.block_shape, sub=policy.sub
+    )
+
+
+def quant_dequant_with_scales(
+    x2d: jnp.ndarray, part: Partition, fmt: FormatSpec, scales: GamScales
+) -> jnp.ndarray:
+    """Fake-quantize with precomputed per-block scales. Returns f32 (M, K)."""
+    xb = to_blocks(x2d.astype(jnp.float32), part)
+    s = scales.scale[:, :, None, None]
+    xq = cast_to_format(xb * s, fmt) / s
+    return from_blocks(xq, x2d.shape)
+
+
+def quant_dequant(
+    x2d: jnp.ndarray, part: Partition, fmt: FormatSpec, algo: str = "gam"
+) -> Tuple[jnp.ndarray, GamScales]:
+    """GAM-scale + fake-quantize. Returns (f32 (M,K), scales)."""
+    scales = compute_scales(x2d, part, fmt, algo=algo)
+    return quant_dequant_with_scales(x2d, part, fmt, scales), scales
+
+
+def _stats(
+    decision, rel_err, amax, f_e4, f_e5, f_bf, nz_frac, m_g
+) -> jnp.ndarray:
+    return jnp.stack(
+        [
+            jnp.float32(decision),
+            jnp.float32(rel_err),
+            jnp.float32(amax),
+            jnp.float32(f_e4),
+            jnp.float32(f_e5),
+            jnp.float32(f_bf),
+            jnp.float32(nz_frac),
+            jnp.float32(m_g),
+        ]
+    )
+
+
+def _fused_quant_err(xb: jnp.ndarray, fmt: FormatSpec, algo: str):
+    """Single-pass quantize + per-block error sums on a blocked view.
+
+    xb: (nm, nk, bm, bk) in its *original* dtype (bf16 in training -- the
+    paper's Fig. 4 pipeline is BF16-in/BF16-out, so large intermediates
+    never materialize in f32; per-block scale math runs in f32 on the tiny
+    (nm, nk) arrays). Returns (xqb in xb.dtype, scales, err_sums, counts).
+    This is the XLA analogue of the fused gam_quant Pallas kernel and the
+    subject of §Perf iterations 1-2.
+    """
+    bmax = jnp.max(jnp.abs(xb), axis=(2, 3)).astype(jnp.float32)
+    scales = scales_from_bmax(bmax, fmt, algo)
+    s = scales.scale[:, :, None, None]
+    xqb_f32 = cast_to_format(xb.astype(jnp.float32) * s, fmt) / s
+    xqb = xqb_f32.astype(xb.dtype)  # Fig. 4: output stays BF16
+    xf = xb.astype(jnp.float32)
+    nz = xf != 0.0
+    err = jnp.where(
+        nz,
+        jnp.abs((xf - xqb.astype(jnp.float32)) / jnp.where(nz, xf, 1.0)),
+        0.0,
+    )
+    return xqb, scales, jnp.sum(err, (2, 3)), jnp.sum(nz, (2, 3))
+
+
+def _tensor_level(x2d: jnp.ndarray, policy: MoRPolicy):
+    """Tensor-level MoR [E4M3, BF16] (paper §3.1).
+
+    The quantization uses the policy's partitioning for scales, but the
+    accept/reject decision is a single global one: per-partition local
+    errors aggregated globally (Fig. 2) vs the Eq. 2 threshold.
+    """
+    part = partition_of(policy)
+    xb = to_blocks(x2d, part)
+    xqb, scales, err_sums, counts = _fused_quant_err(xb, E4M3, policy.algo)
+    n = jnp.maximum(jnp.sum(counts.astype(jnp.float32)), 1.0)
+    err = jnp.sum(err_sums) / n
+    ok = err < policy.threshold
+    y = from_blocks(jnp.where(ok, xqb, xb), x2d.shape)
+    okf = ok.astype(jnp.float32)
+    nz = jnp.sum(counts) / jnp.float32(x2d.size)
+    stats = _stats(
+        okf, err, scales.group_amax, okf, 0.0, 1.0 - okf, nz,
+        scales.group_mantissa,
+    )
+    return y, stats
+
+
+def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
+    """Sub-tensor MoR (paper §3.2): two-way or three-way per-block choice."""
+    part = partition_of(policy)
+    xb = to_blocks(x2d, part)
+
+    q4b, scales4, e4_sum, n = _fused_quant_err(xb, E4M3, policy.algo)
+    q5b, _, e5_sum, _ = _fused_quant_err(xb, E5M2, policy.algo)
+
+    m1 = e4_sum < e5_sum  # Eq. 3: E4M3 beats E5M2 on total rel-err.
+
+    nblocks = jnp.float32(m1.size)
+    nz = jnp.sum(n) / jnp.float32(x2d.size)
+    tot_n = jnp.maximum(jnp.sum(n.astype(jnp.float32)), 1.0)
+    global_e4_err = jnp.sum(e4_sum) / tot_n
+    m1b = m1[:, :, None, None]
+
+    if policy.recipe == "sub2":
+        # Two-way: E4M3 if it beats the E5M2 *benchmark*, else straight BF16.
+        y = from_blocks(jnp.where(m1b, q4b, xb), x2d.shape)
+        f4 = jnp.sum(m1) / nblocks
+        stats = _stats(
+            f4, global_e4_err, scales4.group_amax, f4, 0.0, 1.0 - f4, nz,
+            scales4.group_mantissa,
+        )
+        return y, stats
+
+    # Three-way: E4M3 -> E5M2 (Eq. 4 dynamic-range gate) -> BF16.
+    xabs = jnp.abs(xb)
+    anynz = n > 0
+    bmax = jnp.max(xabs, axis=(2, 3)).astype(jnp.float32)
+    big = jnp.asarray(jnp.finfo(xb.dtype).max, xb.dtype)
+    bmin = jnp.min(jnp.where(xb != 0, xabs, big), axis=(2, 3)).astype(
+        jnp.float32
+    )
+    ratio = jnp.where(anynz, bmax / jnp.where(anynz, bmin, 1.0), 1.0)
+    m2 = ratio < E5M2_RANGE_RATIO
+    use5 = jnp.logical_and(jnp.logical_not(m1), m2)
+    y = from_blocks(
+        jnp.where(m1b, q4b, jnp.where(use5[:, :, None, None], q5b, xb)),
+        x2d.shape,
+    )
+    f4 = jnp.sum(m1) / nblocks
+    f5 = jnp.sum(use5) / nblocks
+    stats = _stats(
+        f4, global_e4_err, scales4.group_amax, f4, f5, 1.0 - f4 - f5, nz,
+        scales4.group_mantissa,
+    )
+    return y, stats
+
+
+def _static_e4m3(x2d: jnp.ndarray, policy: MoRPolicy):
+    part = partition_of(policy)
+    xb = to_blocks(x2d, part)
+    xqb, scales, err_sums, counts = _fused_quant_err(xb, E4M3, policy.algo)
+    n = jnp.maximum(jnp.sum(counts.astype(jnp.float32)), 1.0)
+    err = jnp.sum(err_sums) / n
+    nz = jnp.sum(counts) / jnp.float32(x2d.size)
+    stats = _stats(1.0, err, scales.group_amax, 1.0, 0.0, 0.0, nz,
+                   scales.group_mantissa)
+    return from_blocks(xqb, x2d.shape), stats
+
+
+def mor_quantize(
+    x2d: jnp.ndarray, policy: MoRPolicy
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fake-quantize one 2-D operand view under ``policy``.
+
+    Returns ``(y, stats)`` where ``y`` has x2d's dtype and shape and
+    ``stats`` is the STATS_WIDTH f32 vector documented in the module
+    docstring. Contraction axis must be the last axis of ``x2d``.
+    """
+    if not policy.enabled:
+        nz = jnp.mean((x2d != 0).astype(jnp.float32))
+        amax = jnp.max(jnp.abs(x2d.astype(jnp.float32)))
+        return x2d, _stats(0.0, 0.0, amax, 0.0, 0.0, 1.0, nz, 1.0)
+
+    if policy.recipe == "tensor":
+        y, stats = _tensor_level(x2d, policy)
+    elif policy.recipe in ("sub2", "sub3"):
+        y, stats = _sub_tensor(x2d, policy)
+    elif policy.recipe == "e4m3":
+        y, stats = _static_e4m3(x2d, policy)
+    else:
+        raise ValueError(f"unknown recipe: {policy.recipe}")
+    return y.astype(x2d.dtype), stats

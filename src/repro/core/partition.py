@@ -1,0 +1,105 @@
+"""Partitioning strategies over 2-D operand views (paper §3, Fig. 2).
+
+Every MoR quantization event sees its operand as a 2-D matrix
+``(M, K)`` where the *last* axis is the GEMM contraction axis (callers
+transpose/flatten so this holds). A :class:`Partition` resolves to a
+concrete block shape ``(bm, bk)``:
+
+- ``tensor``      -> one block, the whole tensor           (per-tensor scaling)
+- ``block``       -> ``block_shape`` tiles, default 128x128 (per-block scaling)
+- ``channel``     -> (1, K) rows: one scale per dot-product vector
+                     (per-channel scaling; for the second GEMM operand callers
+                     pass the transposed view so "channel" is always a row here)
+- ``subchannel``  -> (1, sub) chunks of each row (DeepSeek/MX-style 1x128/1x32)
+
+Blocking pads with zeros up to a multiple of the block shape. Zero padding
+is invisible to every downstream consumer: amax ignores zeros unless the
+whole block is padding (guarded), and the non-zero-element masks used by the
+error metrics exclude pads by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "Partition",
+    "PER_TENSOR",
+    "PER_BLOCK_128",
+    "PER_BLOCK_64",
+    "PER_CHANNEL",
+    "SUB_CHANNEL_128",
+    "to_blocks",
+    "from_blocks",
+    "block_amax",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    kind: str  # 'tensor' | 'block' | 'channel' | 'subchannel'
+    block_shape: Tuple[int, int] = (128, 128)
+    sub: int = 128
+
+    def resolve(self, shape: Tuple[int, int]) -> Tuple[int, int]:
+        """Concrete (bm, bk) block dims for a 2-D operand ``shape``."""
+        m, k = shape
+        if self.kind == "tensor":
+            return (m, k)
+        if self.kind == "block":
+            bm, bk = self.block_shape
+            return (min(bm, m), min(bk, k))
+        if self.kind == "channel":
+            return (1, k)
+        if self.kind == "subchannel":
+            return (1, min(self.sub, k))
+        raise ValueError(f"unknown partition kind: {self.kind}")
+
+    def grid(self, shape: Tuple[int, int]) -> Tuple[int, int]:
+        bm, bk = self.resolve(shape)
+        m, k = shape
+        return (-(-m // bm), -(-k // bk))
+
+
+PER_TENSOR = Partition("tensor")
+PER_BLOCK_128 = Partition("block", (128, 128))
+PER_BLOCK_64 = Partition("block", (64, 64))
+PER_CHANNEL = Partition("channel")
+SUB_CHANNEL_128 = Partition("subchannel", sub=128)
+
+
+def _pad2d(x: jnp.ndarray, bm: int, bk: int) -> jnp.ndarray:
+    m, k = x.shape
+    pm = (-m) % bm
+    pk = (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    return x
+
+
+def to_blocks(x: jnp.ndarray, part: Partition) -> jnp.ndarray:
+    """(M, K) -> (nm, nk, bm, bk) zero-padded block view."""
+    assert x.ndim == 2, f"to_blocks wants 2-D, got {x.shape}"
+    bm, bk = part.resolve(x.shape)
+    xp = _pad2d(x, bm, bk)
+    mp, kp = xp.shape
+    xb = xp.reshape(mp // bm, bm, kp // bk, bk)
+    return xb.transpose(0, 2, 1, 3)
+
+
+def from_blocks(
+    xb: jnp.ndarray, shape: Tuple[int, int]
+) -> jnp.ndarray:
+    """(nm, nk, bm, bk) -> (M, K), dropping padding."""
+    nm, nk, bm, bk = xb.shape
+    x = xb.transpose(0, 2, 1, 3).reshape(nm * bm, nk * bk)
+    m, k = shape
+    return x[:m, :k]
+
+
+def block_amax(x: jnp.ndarray, part: Partition) -> jnp.ndarray:
+    """Per-block absolute maxima, shape (nm, nk), f32."""
+    xb = to_blocks(x.astype(jnp.float32), part)
+    return jnp.max(jnp.abs(xb), axis=(2, 3))

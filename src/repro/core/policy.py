@@ -1,0 +1,96 @@
+"""MoR recipe / policy configuration.
+
+A :class:`MoRPolicy` describes *how* one quantization event behaves
+(recipe, partitioning, scaling algorithm, threshold) and a
+:class:`MoRDotPolicy` bundles the per-operand policies of one GEMM
+(activation / weight / gradient roles), mirroring the paper's setup where
+MoR is applied to act, weight and grad tensors (and their transposes) of
+the four linear layers per transformer block.
+
+Everything is a frozen dataclass so policies can ride through
+``jax.custom_vjp`` nondiff args and ``jax.jit`` static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["MoRPolicy", "MoRDotPolicy", "TENSOR_MOR", "SUBTENSOR2_MOR",
+           "SUBTENSOR3_MOR", "BF16_BASELINE", "paper_default"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoRPolicy:
+    """Policy for one quantization event (one tensor view).
+
+    recipe:
+      'off'      -- passthrough (BF16 baseline).
+      'tensor'   -- tensor-level MoR [E4M3, BF16] with threshold (Eq. 2).
+      'sub2'     -- sub-tensor two-way  [E4M3, BF16]        (Eq. 3 gate).
+      'sub3'     -- sub-tensor three-way [E4M3, E5M2, BF16] (Eq. 3 + Eq. 4).
+      'e4m3'     -- always-quantize static recipe (no dynamic decision);
+                    useful as the non-MoR FP8 baseline.
+    partition: 'tensor' | 'block' | 'channel' | 'subchannel'
+    """
+
+    recipe: str = "tensor"
+    partition: str = "block"
+    block_shape: Tuple[int, int] = (128, 128)
+    sub: int = 128
+    threshold: float = 0.045  # th_E4M3, paper default 4.5%
+    algo: str = "gam"  # 'gam' | 'e8m0' | 'fp32_amax'
+
+    @property
+    def enabled(self) -> bool:
+        return self.recipe != "off"
+
+    def replace(self, **kw) -> "MoRPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoRDotPolicy:
+    """Per-operand policies for one mor_dot GEMM (fwd + both bwd GEMMs)."""
+
+    act: MoRPolicy = MoRPolicy()
+    weight: MoRPolicy = MoRPolicy()
+    grad: MoRPolicy = MoRPolicy()
+    # When False the bwd GEMMs run unquantized (ablation hook).
+    quantize_bwd: bool = True
+    # Beyond-paper: reuse cached decisions/scales for K steps (0 = paper
+    # behaviour, recompute metrics every micro-batch).
+    decision_cache_steps: int = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.act.enabled or self.weight.enabled or self.grad.enabled
+
+    def replace(self, **kw) -> "MoRDotPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+def paper_default(
+    recipe: str = "tensor",
+    partition: str = "block",
+    block_shape: Tuple[int, int] = (128, 128),
+    threshold: float = 0.045,
+    algo: str = "gam",
+) -> MoRDotPolicy:
+    p = MoRPolicy(
+        recipe=recipe,
+        partition=partition,
+        block_shape=block_shape,
+        threshold=threshold,
+        algo=algo,
+    )
+    return MoRDotPolicy(act=p, weight=p, grad=p)
+
+
+TENSOR_MOR = paper_default("tensor")
+SUBTENSOR2_MOR = paper_default("sub2")
+SUBTENSOR3_MOR = paper_default("sub3")
+BF16_BASELINE = MoRDotPolicy(
+    act=MoRPolicy(recipe="off"),
+    weight=MoRPolicy(recipe="off"),
+    grad=MoRPolicy(recipe="off"),
+)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, SyntheticLM, prefetch
+
+__all__ = ["DataConfig", "SyntheticLM", "prefetch"]

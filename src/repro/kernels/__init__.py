@@ -1,0 +1,3 @@
+from .ops import flash_attention, fp8_gemm, gam_quant, resolve_backend
+
+__all__ = ["flash_attention", "fp8_gemm", "gam_quant", "resolve_backend"]

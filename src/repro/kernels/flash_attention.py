@@ -1,0 +1,127 @@
+"""Flash attention forward kernel (Pallas, TPU target).
+
+Online-softmax over KV blocks with (m, l, acc) persisted in VMEM scratch
+across the innermost grid dimension; causal masking by block index. The
+(S, T) score matrix never leaves VMEM -- this kernel is the hardware
+realization of the chunked XLA attention in repro.models.attention (whose
+remat-ed scan is the portable fallback used by the dry-run).
+
+Layout: q (BH, S, d), k/v (BH, T, d) -- callers fold batch x heads (GQA
+kv heads are repeated into the q-head count by ops.flash_attention).
+Grid: (BH, S/bq, T/bk), KV innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale: float, causal: bool, bq: int, bk: int, n_k: int):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qi = pl.program_id(1)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bk)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 0
+            )
+            k_pos = kj * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1
+            )
+            s = jnp.where(k_pos <= q_pos, s, _NEG)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    if causal:
+        # Skip blocks strictly above the diagonal.
+        @pl.when(kj * bk <= qi * bq + bq - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(kj == n_k - 1)
+    def _():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_fwd(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (BH, S, d); k, v: (BH, T, d). Returns (BH, S, d) in q.dtype."""
+    BH, S, d = q.shape
+    T = k.shape[1]
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0
+    n_k = T // bk
+    scale = d**-0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, bq=bq, bk=bk, n_k=n_k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,87 @@
+"""Jitted public wrappers for the Pallas kernels with backend dispatch.
+
+backend='auto' uses the Pallas kernels on TPU and interpret mode under
+REPRO_KERNEL_INTERPRET=1 (CI/CPU validation); otherwise falls back to the
+pure-jnp reference path so the library works everywhere.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import E4M3, FormatSpec
+from repro.core.gam import split_mantissa_exponent
+from repro.core.partition import Partition
+
+from . import ref as _ref
+from .flash_attention import flash_attention_fwd
+from .fp8_gemm import fp8_gemm as _fp8_gemm_kernel
+from .gam_quant import gam_quant_blocks
+
+__all__ = ["gam_quant", "fp8_gemm", "flash_attention", "resolve_backend"]
+
+
+def resolve_backend(backend: str = "auto") -> str:
+    if backend != "auto":
+        return backend
+    if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
+        return "interpret"
+    if any(d.platform == "tpu" for d in jax.devices()):
+        return "pallas"
+    return "xla"
+
+
+def gam_quant(
+    x: jnp.ndarray,
+    *,
+    block=(128, 128),
+    fmt: FormatSpec = E4M3,
+    algo: str = "gam",
+    backend: str = "auto",
+):
+    """Fused quantize of a 2-D operand. Returns (xq, exp, err_sums, counts).
+
+    Pallas path: global amax via one XLA reduce -> group mantissa -> fused
+    per-block kernel. XLA path: the pure-jnp oracle.
+    """
+    be = resolve_backend(backend)
+    part = Partition("block", block)
+    if be == "xla":
+        return _ref.gam_quant_ref(x, part, fmt, algo)
+    g_amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    safe_g = jnp.where(g_amax > 0, g_amax, 1.0)
+    m_g, _ = split_mantissa_exponent(fmt.amax / safe_g)
+    if algo != "gam":
+        m_g = jnp.float32(1.0)
+    return gam_quant_blocks(
+        x, m_g,
+        block=block, q_amax=fmt.amax, fmt_dtype=fmt.dtype, algo=algo,
+        interpret=(be == "interpret"),
+    )
+
+
+def fp8_gemm(a_q, b_q, a_scale, b_scale, *, block=(128, 128, 128),
+             out_dtype=jnp.bfloat16, backend: str = "auto"):
+    be = resolve_backend(backend)
+    if be == "xla":
+        return _ref.fp8_gemm_ref(a_q, b_q, a_scale, b_scale, block,
+                                 out_dtype)
+    return _fp8_gemm_kernel(
+        a_q, b_q, a_scale, b_scale, block=block, out_dtype=out_dtype,
+        interpret=(be == "interpret"),
+    )
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
+                    backend: str = "auto"):
+    """q/k/v: (BH, S|T, d) head-folded layout."""
+    be = resolve_backend(backend)
+    if be == "xla":
+        return _ref.flash_attention_ref(q, k, v, causal)
+    return flash_attention_fwd(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=(be == "interpret"),
+    )

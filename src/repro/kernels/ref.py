@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FormatSpec
+from repro.core.gam import compute_scales
+from repro.core.mor import quant_dequant_with_scales
+from repro.core.partition import Partition, to_blocks
+
+__all__ = ["gam_quant_ref", "fp8_gemm_ref", "flash_attention_ref"]
+
+
+def gam_quant_ref(
+    x: jnp.ndarray,
+    part: Partition,
+    fmt: FormatSpec,
+    algo: str = "gam",
+):
+    """Reference for gam_quant_blocks: (xq, block_exp, err_sums, counts)."""
+    scales = compute_scales(x, part, fmt, algo=algo)
+    xq = quant_dequant_with_scales(x, part, fmt, scales).astype(x.dtype)
+    xb = to_blocks(x.astype(jnp.float32), part)
+    xqb = to_blocks(xq.astype(jnp.float32), part)
+    nz = xb != 0
+    err = jnp.where(nz, jnp.abs((xb - xqb) / jnp.where(nz, xb, 1.0)), 0.0)
+    return (
+        xq,
+        scales.block_exp,
+        jnp.sum(err, (2, 3)),
+        jnp.sum(nz, (2, 3)).astype(jnp.float32),
+    )
+
+
+def fp8_gemm_ref(
+    a_q: jnp.ndarray,
+    b_q: jnp.ndarray,
+    a_scale: jnp.ndarray,
+    b_scale: jnp.ndarray,
+    block: Tuple[int, int, int] = (128, 128, 128),
+    out_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """Dequantize per block then matmul in f32."""
+    bm, bn, bk = block
+    M, K = a_q.shape
+    N = b_q.shape[1]
+    a = a_q.astype(jnp.float32).reshape(M // bm, bm, K // bk, bk)
+    a = a / a_scale[:, None, :, None]
+    b = b_q.astype(jnp.float32).reshape(K // bk, bk, N // bn, bn)
+    b = b / b_scale[:, None, :, None]
+    return (a.reshape(M, K) @ b.reshape(K, N)).astype(out_dtype)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True
+) -> jnp.ndarray:
+    """Naive softmax attention. q: (BH, S, d), k/v: (BH, T, d)."""
+    S, d = q.shape[1], q.shape[2]
+    T = k.shape[1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d**-0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bqk,bkd->bqd", p, v.astype(jnp.float32)
+    ).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .mesh import HW, make_local_mesh, make_production_mesh
+
+__all__ = ["HW", "make_local_mesh", "make_production_mesh"]

@@ -1,0 +1,421 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` visits ``while`` bodies once,
+so any model using ``lax.scan`` over layers (all of ours) is undercounted
+by ~n_layers x. This module parses the optimized (partitioned, per-device)
+HLO text, walks the computation graph, and multiplies loop bodies by their
+trip counts, producing:
+
+  * flops          -- dot/elementwise/reduce FLOPs per device per step
+  * bytes          -- HBM traffic proxy: operand+result bytes of every
+                      top-level (post-fusion) instruction
+  * collectives    -- per-op operand bytes AND ring-traffic estimates,
+                      with replica-group sizes
+
+Validated against analytic 6*N*D model FLOPs in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["ModuleCost", "analyze_hlo", "COLLECTIVE_OPS"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Ops that move no data / cost nothing.
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# Elementwise-ish ops: 1 flop per output element.
+_EW_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "rsqrt", "sqrt", "tanh", "logistic",
+    "power", "and", "or", "xor", "not", "compare", "select", "clamp",
+    "floor", "ceil", "round-nearest-even", "sign", "cosine", "sine",
+    "atan2", "expm1", "log1p", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "convert",
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of a shape string; handles tuples by summing components."""
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(shape_str):
+        if dt not in _DTYPE_BYTES or dt in ("token", "opaque"):
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: List[str]
+    attrs: str
+    args: str = ""  # raw text inside the call parens (constants, etc.)
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_operand_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVE_OPS}
+    )
+    coll_traffic_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVE_OPS}
+    )
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVE_OPS}
+    )
+
+    def add(self, other: "ModuleCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k in COLLECTIVE_OPS:
+            self.coll_operand_bytes[k] += other.coll_operand_bytes[k] * mult
+            self.coll_traffic_bytes[k] += other.coll_traffic_bytes[k] * mult
+            self.coll_counts[k] += other.coll_counts[k] * mult
+
+    @property
+    def total_coll_operand_bytes(self) -> float:
+        return sum(self.coll_operand_bytes.values())
+
+    @property
+    def total_coll_traffic_bytes(self) -> float:
+        return sum(self.coll_traffic_bytes.values())
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$"
+)
+
+
+def _split_shape_op(rest: str) -> Optional[Tuple[str, str, str]]:
+    """'f32[2]{0} dot(%a, %b), attrs' -> (shape, op, tail)."""
+    rest = rest.strip()
+    if rest.startswith("("):  # tuple shape
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape = rest[: i + 1]
+                    tail = rest[i + 1 :].strip()
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape = rest[:sp]
+        tail = rest[sp + 1 :]
+    m = re.match(r"([\w\-]+)\(", tail)
+    if not m:
+        return None
+    op = m.group(1)
+    return shape, op, tail[m.end() - 1 :]
+
+
+def _call_args(tail: str) -> Tuple[str, str]:
+    """tail starts at '(' of the call; returns (inside, after)."""
+    depth = 0
+    for i, ch in enumerate(tail):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return tail[1:i], tail[i + 1 :]
+    return tail[1:], ""
+
+
+def parse_hlo(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        so = _split_shape_op(rest)
+        if not so:
+            continue
+        shape, op, tail = so
+        inside, after = _call_args(tail)
+        operands = re.findall(r"%([\w\.\-]+)", inside)
+        comps[cur].append(Instr(name, shape, op, operands, after, inside))
+    return comps
+
+
+def _group_size(attrs: str, default: int) -> int:
+    # replica_groups=[128,2]<=[256]  (iota form: 128 groups of 2)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    # explicit: replica_groups={{0,1,2,3},{...}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_INT_CONST = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(cond_instrs: List[Instr]) -> int:
+    """Max integer constant in a while condition == the loop bound for
+    canonical 0..N counted loops (all lax.scan/map loops)."""
+    best = 1
+    for ins in cond_instrs:
+        if ins.op == "constant":
+            m = re.fullmatch(r"-?(\d+)", ins.args.strip())
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _callee(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def analyze_hlo(text: str, n_partitions: int = 1) -> ModuleCost:
+    comps = parse_hlo(text)
+    shapes: Dict[str, Dict[str, str]] = {
+        c: {i.name: i.shape for i in instrs} for c, instrs in comps.items()
+    }
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the largest computation
+        entry = max(comps, key=lambda c: len(comps[c]))
+
+    memo: Dict[Tuple[str, bool], ModuleCost] = {}
+
+    def comp_cost(cname: str, flops_only: bool = False) -> ModuleCost:
+        key = (cname, flops_only)
+        if key in memo:
+            return memo[key]
+        cost = ModuleCost()
+        smap = shapes.get(cname, {})
+        for ins in comps.get(cname, []):
+            op = ins.op
+            if op in _FREE_OPS:
+                continue
+            res_b = _shape_bytes(ins.shape)
+            opnd_b = sum(
+                _shape_bytes(smap.get(o, "")) for o in ins.operands
+            )
+            if op == "while":
+                body = _callee(ins.attrs, "body")
+                cond = _callee(ins.attrs, "condition")
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    cost.add(comp_cost(body, flops_only), trips)
+                continue
+            if op == "conditional":
+                # count the most expensive branch
+                branches = [
+                    n for n in re.findall(r"%([\w\.\-]+)", ins.attrs)
+                    if n in comps
+                ]
+                subs = [comp_cost(b, flops_only) for b in branches]
+                if subs:
+                    biggest = max(subs, key=lambda c: c.flops + c.bytes)
+                    cost.add(biggest)
+                continue
+            if op == "call":
+                callee = _callee(ins.attrs, "to_apply")
+                if callee:
+                    cost.add(comp_cost(callee, flops_only))
+                continue
+            if op == "fusion":
+                callee = _callee(ins.attrs, "calls")
+                if callee:
+                    sub = comp_cost(callee, True)  # flops only inside
+                    cost.flops += sub.flops
+                    cost.transcendentals += sub.transcendentals
+                if not flops_only:
+                    cost.bytes += res_b + opnd_b
+                continue
+            base = op
+            for suf in ("-start", "-done"):
+                if base.endswith(suf):
+                    base = base[: -len(suf)]
+            if base in COLLECTIVE_OPS:
+                if op.endswith("-done"):
+                    continue
+                if True:
+                    n = _group_size(ins.attrs, n_partitions)
+                    if base == "all-gather":
+                        operand_bytes = res_b / max(n, 1)
+                        traffic = res_b * (n - 1) / max(n, 1)
+                    elif base == "all-reduce":
+                        operand_bytes = res_b
+                        traffic = 2.0 * res_b * (n - 1) / max(n, 1)
+                    elif base == "reduce-scatter":
+                        operand_bytes = res_b * n
+                        traffic = res_b * (n - 1)
+                    elif base == "all-to-all":
+                        operand_bytes = res_b
+                        traffic = res_b * (n - 1) / max(n, 1)
+                    else:  # collective-permute
+                        operand_bytes = res_b
+                        traffic = res_b
+                    cost.coll_operand_bytes[base] += operand_bytes
+                    cost.coll_traffic_bytes[base] += traffic
+                    cost.coll_counts[base] += 1
+                    if not flops_only:
+                        cost.bytes += res_b + opnd_b
+                    continue
+            if op == "dot":
+                k = 1
+                m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                              ins.attrs)
+                if m and ins.operands:
+                    lhs_shape = smap.get(ins.operands[0], "")
+                    t = _SHAPE_TOKEN.search(lhs_shape)
+                    if t:
+                        dims = [int(d) for d in t.group(2).split(",") if d]
+                        for ci in m.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                k *= dims[int(ci)]
+                cost.flops += 2.0 * _shape_elems(ins.shape) * k
+                if not flops_only:
+                    cost.bytes += res_b + opnd_b
+                continue
+            if op in ("reduce", "reduce-window"):
+                cost.flops += sum(
+                    _shape_elems(smap.get(o, "")) for o in ins.operands
+                )
+                if not flops_only:
+                    cost.bytes += res_b + opnd_b
+                continue
+            if op in _EW_OPS:
+                cost.flops += _shape_elems(ins.shape)
+                if op in ("exponential", "log", "rsqrt", "sqrt", "tanh",
+                          "logistic", "power", "cosine", "sine"):
+                    cost.transcendentals += _shape_elems(ins.shape)
+                if not flops_only:
+                    cost.bytes += res_b + opnd_b
+                continue
+            # everything else (copy, reshape, transpose, dynamic-slice,
+            # scatter, gather, pad, concatenate, ...): data movement.
+            if not flops_only:
+                cost.bytes += res_b + opnd_b
+        memo[key] = cost
+        return cost
+
+    return comp_cost(entry)
+
+
+def top_bytes_contributors(text: str, top: int = 30):
+    """Leaf instructions ranked by bytes x trip-multiplier (debugging aid
+    for the perf loop: shows exactly where HBM traffic goes)."""
+    comps = parse_hlo(text)
+    shapes = {
+        c: {i.name: i.shape for i in instrs} for c, instrs in comps.items()
+    }
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.search(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    rows = []
+
+    def walk(cname: str, mult: float):
+        smap = shapes.get(cname, {})
+        for ins in comps.get(cname, []):
+            op = ins.op
+            if op in _FREE_OPS:
+                continue
+            if op == "while":
+                body = _callee(ins.attrs, "body")
+                cond = _callee(ins.attrs, "condition")
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    walk(body, mult * trips)
+                continue
+            if op == "call":
+                callee = _callee(ins.attrs, "to_apply")
+                if callee:
+                    walk(callee, mult)
+                continue
+            res_b = _shape_bytes(ins.shape)
+            opnd_b = sum(
+                _shape_bytes(smap.get(o, "")) for o in ins.operands
+            )
+            total = (res_b + opnd_b) * mult
+            if total > 0:
+                meta = re.search(r'op_name="([^"]*)"', ins.attrs)
+                rows.append(
+                    (total, mult, op, ins.shape[:48],
+                     (meta.group(1)[-80:] if meta else ""))
+                )
+
+    if entry:
+        walk(entry, 1.0)
+    rows.sort(reverse=True)
+    return rows[:top]

@@ -1,0 +1,17 @@
+from .api import (
+    cache_specs,
+    cross_entropy,
+    init_cache,
+    init_params,
+    make_decode_fn,
+    make_loss_fn,
+    make_prefill_fn,
+    make_tokens,
+)
+from .common import use_mesh
+
+__all__ = [
+    "cache_specs", "cross_entropy", "init_cache", "init_params",
+    "make_decode_fn", "make_loss_fn", "make_prefill_fn", "make_tokens",
+    "use_mesh",
+]

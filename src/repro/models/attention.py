@@ -1,0 +1,183 @@
+"""Chunked flash-style attention (pure JAX) + decode attention.
+
+Training/prefill attention never materializes the (S, T) score matrix:
+queries are processed in chunks (lax.map) and keys/values are streamed with
+an online-softmax scan -- O(q_chunk * k_chunk) live memory per (batch, head).
+This is the XLA-portable analogue of the Pallas flash kernel in
+repro/kernels/flash_attention.py (used on real TPUs); both match the
+reference oracle in tests.
+
+Supports GQA/MQA (grouped heads), causal / full / prefix-LM / sliding-window
+masking, all of which the assigned architectures need.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import constrain, pick_chunk
+
+__all__ = ["flash_attention", "decode_attention"]
+
+_NEG = -1e30
+
+
+def _mask(kind: str, q_pos, k_pos, prefix_len: int, window: int):
+    """(qc, kc) bool mask. q_pos: (qc,), k_pos: (kc,)."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    if kind == "full":
+        m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    elif kind == "causal":
+        m = kp <= qp
+    elif kind == "prefix":
+        m = (kp <= qp) | (kp < prefix_len)
+    elif kind == "sliding":
+        m = (kp <= qp) & (qp - kp < window)
+    else:
+        raise ValueError(kind)
+    return m
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    kind: str = "causal",
+    prefix_len: int = 0,
+    window: int = 0,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+) -> jnp.ndarray:
+    """q: (B, S, Hq, dh); k, v: (B, T, Hkv, dh) with Hq % Hkv == 0.
+
+    Returns (B, S, Hq, dh) in q.dtype. Softmax in f32.
+    """
+    B, S, Hq, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qc = pick_chunk(S, q_chunk)
+    kc = pick_chunk(T, k_chunk)
+    nq, nk = S // qc, T // kc
+
+    scale = dh**-0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, nq, qc, Hkv, G, dh)
+    qg = jnp.moveaxis(qg, 1, 0)  # (nq, B, qc, Hkv, G, dh)
+    kcs = jnp.moveaxis(k.reshape(B, nk, kc, Hkv, dh), 1, 0)
+    vcs = jnp.moveaxis(v.reshape(B, nk, kc, Hkv, dh), 1, 0)
+
+    # Sliding-window: each q chunk only sees a static-size band of kv
+    # chunks (dynamic start). Without this the scan visits all nk chunks
+    # and masks ~(T/window)x of them away -- measured 8x wasted traffic
+    # for hymba prefill_32k (Perf iteration H2).
+    band = nk
+    if kind == "sliding" and window > 0:
+        band = min((window + qc - 2) // kc + 2, nk)
+
+    def q_chunk_fn(args):
+        qi, q_i = args  # q_i: (B, qc, Hkv, G, dh)
+        q_pos = qi * qc + jnp.arange(qc)
+
+        m0 = jnp.full((B, Hkv, G, qc), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qc, dh), jnp.float32)
+
+        if band < nk:
+            start = jnp.clip(
+                (qi * qc - window + 1) // kc, 0, nk - band
+            )
+            k_sel = jax.lax.dynamic_slice_in_dim(kcs, start, band, axis=0)
+            v_sel = jax.lax.dynamic_slice_in_dim(vcs, start, band, axis=0)
+            k_idx = start + jnp.arange(band)
+        else:
+            k_sel, v_sel, k_idx = kcs, vcs, jnp.arange(nk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_j, v_j = inp
+            k_pos = kj * kc + jnp.arange(kc)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_i, k_j.astype(jnp.float32)
+            )
+            msk = _mask(kind, q_pos, k_pos, prefix_len, window)
+            s = jnp.where(msk[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_j.astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        # Remat each kv step: the backward recomputes the (qc, kc) score
+        # chunk from q/k instead of saving every probability chunk -- the
+        # flash-attention backward. Without this, autodiff stores the full
+        # S x S score matrix in f32 (measured: ~40% of HBM traffic).
+        kv_step = jax.checkpoint(kv_step, prevent_cse=False)
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (k_idx, k_sel, v_sel)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)  # (B, qc, Hkv, G, dh)
+
+    outs = jax.lax.map(q_chunk_fn, (jnp.arange(nq), qg))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    cur_index: jnp.ndarray,
+    *,
+    window: int = 0,
+    k_scale: jnp.ndarray = None,
+    v_scale: jnp.ndarray = None,
+) -> jnp.ndarray:
+    """Single-token attention against a KV cache.
+
+    q: (B, 1, Hq, dh); caches: (B, T, Hkv, dh); cur_index: () current
+    position (the caches hold valid entries at positions <= cur_index).
+
+    FP8 caches (beyond-paper, DESIGN.md §3): payloads are float8_e4m3
+    with per-(position, head) scales (B, T, Hkv). The scales factor out
+    of both einsums -- scores divide by k_scale after the QK dot, and
+    v_scale folds into the probabilities -- so the dequant never
+    materializes a full-precision cache copy.
+    """
+    B, _, Hq, dh = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = dh**-0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    if k_scale is not None:
+        ks = jnp.where(k_scale > 0, k_scale, 1.0)  # empty slots: scale 0
+        s = s / jnp.moveaxis(ks, 1, 2)[:, :, None, :]  # (B,Hkv,1,T)
+    k_pos = jnp.arange(T)
+    valid = k_pos <= cur_index
+    if window:
+        valid &= k_pos > cur_index - window
+    s = jnp.where(valid[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        vs = jnp.where(v_scale > 0, v_scale, 1.0)
+        p = p / jnp.moveaxis(vs, 1, 2)[:, :, None, :]
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, dh).astype(q.dtype)
+
+
+def quantize_kv(x: jnp.ndarray):
+    """(B, S, H, dh) -> (float8_e4m3 payload, (B, S, H) f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    s = jnp.where(amax > 0, 448.0 / amax, 1.0)
+    payload = jnp.clip(
+        x.astype(jnp.float32) * s[..., None], -448.0, 448.0
+    ).astype(jnp.float8_e4m3fn)
+    return payload, s

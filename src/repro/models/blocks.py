@@ -1,0 +1,254 @@
+"""Transformer sublayers with MoR-quantized linears.
+
+Every GEMM the paper quantizes (linear_qkv, linear_proj, fc1, fc2, and the
+MoE expert FFNs) goes through :func:`repro.core.mor_dot`; routers, norms and
+embeddings stay BF16, matching the paper's policy.
+
+Block functions share the signature
+    f(p, x, tok, policy, cfg, mode, cache, cur_index) -> (x, cache, stats)
+where ``p``/``tok``/``cache`` are this layer's slices of the stacked
+per-layer pytrees (see transformer.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MoRDotPolicy, mor_dot
+from repro.configs.base import ArchConfig
+
+from .attention import decode_attention, flash_attention
+from .common import (
+    activation,
+    apply_rope,
+    constrain,
+    glu_split,
+    layer_norm,
+    pick_chunk,
+    rms_norm,
+)
+
+__all__ = [
+    "norm", "attn_sublayer", "mlp_sublayer", "moe_sublayer",
+    "dense_block", "moe_block",
+]
+
+
+def norm(p_norm, x, cfg: ArchConfig):
+    if cfg.norm == "ln":
+        return layer_norm(x, p_norm["scale"], p_norm["bias"])
+    return rms_norm(x, p_norm["scale"])
+
+
+def _split_qkv(qkv, cfg: ArchConfig):
+    B, S = qkv.shape[:2]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q, k, v = jnp.split(qkv, [hq * hd, (hq + hkv) * hd], axis=-1)
+    return (
+        q.reshape(B, S, hq, hd),
+        k.reshape(B, S, hkv, hd),
+        v.reshape(B, S, hkv, hd),
+    )
+
+
+def attn_sublayer(
+    p,
+    xn,
+    tok,
+    policy: MoRDotPolicy,
+    cfg: ArchConfig,
+    mode: str,
+    cache: Optional[Dict[str, jnp.ndarray]],
+    cur_index,
+    *,
+    kind: str = "causal",
+    prefix_len: int = 0,
+    window: int = 0,
+    use_rope: bool = True,
+):
+    """Self-attention with GQA + RoPE + KV cache. Returns (y, cache, stats)."""
+    B, S, _ = xn.shape
+    qkv, st_qkv = mor_dot(xn, p["wqkv"], tok["qkv"], policy)
+    # Pin the SP->TP transition on the BF16 GEMM output: without this
+    # GSPMD reshards f32 rope/quant intermediates (2x collective bytes,
+    # Perf iteration 5).
+    if mode != "decode" and S > 1:
+        qkv = constrain(qkv, "batch", None, "model")
+    q, k, v = _split_qkv(qkv, cfg)
+
+    if mode == "decode":
+        pos = jnp.full((B, 1), cur_index, jnp.int32)
+        if use_rope:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        fp8_cache = "k_scale" in cache
+        if fp8_cache:
+            from .attention import quantize_kv
+
+            k_pay, k_s = quantize_kv(k)
+            v_pay, v_s = quantize_kv(v)
+            upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), cur_index, axis=1
+            )
+            new_cache = {
+                "k": upd(cache["k"], k_pay),
+                "v": upd(cache["v"], v_pay),
+                "k_scale": upd(cache["k_scale"], k_s),
+                "v_scale": upd(cache["v_scale"], v_s),
+            }
+            out = decode_attention(
+                q, new_cache["k"], new_cache["v"], cur_index,
+                window=window, k_scale=new_cache["k_scale"],
+                v_scale=new_cache["v_scale"],
+            )
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cur_index, axis=1
+            )
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cur_index, axis=1
+            )
+            out = decode_attention(
+                q, k_cache, v_cache, cur_index, window=window
+            )
+            new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        pos = jnp.arange(S, dtype=jnp.int32)[None]
+        if use_rope:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        out = flash_attention(
+            q, k, v, kind=kind, prefix_len=prefix_len, window=window
+        )
+        new_cache = (
+            {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16)}
+            if mode == "prefill"
+            else None
+        )
+
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    y, st_proj = mor_dot(out, p["wo"], tok["proj"], policy)
+    return y, new_cache, {"qkv": st_qkv, "proj": st_proj}
+
+
+def mlp_sublayer(p, xn, tok, policy: MoRDotPolicy, cfg: ArchConfig,
+                 d_ff: Optional[int] = None):
+    gated = cfg.act in ("swiglu", "geglu")
+    act_fn = activation(cfg.act)
+    h, st1 = mor_dot(xn, p["wi"], tok["fc1"], policy)
+    h = glu_split(h, gated, act_fn)
+    y, st2 = mor_dot(h, p["wo"], tok["fc2"], policy)
+    return y, {"fc1": st1, "fc2": st2}
+
+
+# -------------------------------------------------------------------- MoE --
+def moe_sublayer(p, xn, tok, policy: MoRDotPolicy, cfg: ArchConfig):
+    """Capacity-based MoE with per-(example, chunk) grouping.
+
+    Tokens are chunked along the sequence axis (scan => bounded transients);
+    each (example, chunk) group dispatches into an (E, C, d) buffer via
+    one-hot einsums (GSPMD-friendly: group dim rides the data axis, expert
+    dim rides the model axis). Expert FFN GEMMs are MoR-quantized per
+    expert via vmap(mor_dot).
+    """
+    B, S, d = xn.shape
+    E, K = cfg.n_experts, cfg.top_k
+    gated = cfg.act in ("swiglu", "geglu")
+    act_fn = activation(cfg.act)
+
+    s_sub = pick_chunk(S, 256)
+    n_sub = S // s_sub
+    C = max(1, int(K * s_sub / E * cfg.capacity_factor))
+
+    w1, w2, router = p["w1"], p["w2"], p["router"]
+    tok_w1, tok_w2 = tok["w1"], tok["w2"]
+
+    xc = xn.reshape(B, n_sub, s_sub, d)
+    xc = jnp.moveaxis(xc, 1, 0)  # (n_sub, B, s_sub, d)
+
+    def chunk_fn(_, x_c):
+        # x_c: (B, t, d)
+        logits = jnp.einsum(
+            "btd,de->bte", x_c, router, preferred_element_type=jnp.float32
+        )
+        probs = jax.nn.softmax(logits, axis=-1)
+        vals, idx = jax.lax.top_k(probs, K)  # (B, t, K)
+        vals = vals / jnp.maximum(
+            jnp.sum(vals, -1, keepdims=True), 1e-9
+        )
+        # Flatten the K token-copies.
+        t = x_c.shape[1]
+        ids = idx.reshape(B, t * K)
+        gate = vals.reshape(B, t * K)
+        oh = jax.nn.one_hot(ids, E, dtype=jnp.float32)  # (B, tK, E)
+        pos = jnp.cumsum(oh, axis=1) - oh
+        slot = jnp.sum(pos * oh, axis=-1)  # (B, tK)
+        keep = (slot < C).astype(jnp.float32)
+        slot_oh = jax.nn.one_hot(
+            jnp.minimum(slot, C - 1).astype(jnp.int32), C, dtype=jnp.float32
+        ) * keep[..., None]
+        x_rep = jnp.repeat(
+            x_c.astype(jnp.float32), K, axis=1
+        )  # (B, tK, d)
+
+        xbuf = jnp.einsum("bse,bsc,bsd->ebcd", oh, slot_oh, x_rep)
+        xbuf = constrain(xbuf, "model", "batch", None, None)
+        xbuf = xbuf.astype(xn.dtype)
+
+        h, st1 = jax.vmap(
+            lambda a, w, tk: mor_dot(a, w, tk, policy)
+        )(xbuf, w1, tok_w1)
+        h = glu_split(h, gated, act_fn)
+        ybuf, st2 = jax.vmap(
+            lambda a, w, tk: mor_dot(a, w, tk, policy)
+        )(h, w2, tok_w2)
+
+        y = jnp.einsum(
+            "bse,bsc,bs,ebcd->bsd",
+            oh, slot_oh, gate, ybuf.astype(jnp.float32),
+        )
+        y = y.reshape(B, t, K, d).sum(axis=2)
+
+        # Load-balance aux loss (Switch-style) + drop fraction.
+        me = jnp.mean(oh.reshape(B, t, K, E).sum(2), axis=(0, 1))
+        ce = jnp.mean(probs, axis=(0, 1))
+        aux = jnp.sum(me * ce) * E
+        dropped = 1.0 - jnp.mean(keep)
+        return None, (y.astype(xn.dtype), st1, st2, aux, dropped)
+
+    _, (ys, st1, st2, aux, dropped) = jax.lax.scan(chunk_fn, None, xc)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d)
+    stats = {
+        "w1": jnp.mean(st1, axis=0),  # (E, 2, W) averaged over chunks
+        "w2": jnp.mean(st2, axis=0),
+        "aux_loss": jnp.mean(aux),
+        "dropped": jnp.mean(dropped),
+    }
+    return y, stats
+
+
+# ------------------------------------------------------------ full blocks --
+def dense_block(p, x, tok, policy, cfg, mode, cache, cur_index, **attn_kw):
+    xn = norm(p["ln1"], x, cfg)
+    a, new_cache, st_a = attn_sublayer(
+        p, xn, tok, policy, cfg, mode, cache, cur_index, **attn_kw
+    )
+    x = x + a
+    xn2 = norm(p["ln2"], x, cfg)
+    m, st_m = mlp_sublayer(p["mlp"], xn2, tok, policy, cfg)
+    x = x + m
+    return x, new_cache, {**st_a, **st_m}
+
+
+def moe_block(p, x, tok, policy, cfg, mode, cache, cur_index, **attn_kw):
+    xn = norm(p["ln1"], x, cfg)
+    a, new_cache, st_a = attn_sublayer(
+        p, xn, tok, policy, cfg, mode, cache, cur_index, **attn_kw
+    )
+    x = x + a
+    xn2 = norm(p["ln2"], x, cfg)
+    m, st_m = moe_sublayer(p["moe"], xn2, tok, policy, cfg)
+    x = x + m
+    return x, new_cache, {**st_a, **st_m}

@@ -1,0 +1,187 @@
+"""Shared model building blocks: norms, RoPE, activations, scan helpers,
+and mesh-agnostic sharding constraints.
+
+Model code never imports a concrete mesh; `constrain(x, *axes)` applies a
+``with_sharding_constraint`` only when a mesh has been installed via
+:func:`use_mesh` (done by the dry-run / trainer before tracing). This keeps
+the model definitions runnable on a single CPU device for smoke tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "use_mesh", "current_mesh", "constrain", "batch_axes", "rms_norm",
+    "layer_norm", "apply_rope", "rope_freqs", "sinusoidal_positions",
+    "activation", "chunked_scan", "pick_chunk", "glu_split",
+]
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("repro_mesh",
+                                                       default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    token = _MESH.set(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def batch_axes() -> Tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    mesh = current_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def constrain(x: jnp.ndarray, *spec: Any) -> jnp.ndarray:
+    """with_sharding_constraint(x, P(*spec)) if a mesh is installed.
+
+    Spec entries may be axis names, None, tuples, or the sentinel 'batch'
+    which expands to the batch axes of the current mesh.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    resolved = []
+    for s in spec:
+        if s == "batch":
+            resolved.append(batch_axes() or None)
+        elif isinstance(s, str):
+            resolved.append(s if s in names else None)
+        elif isinstance(s, (tuple, list)):
+            kept = tuple(a for a in s if a in names)
+            resolved.append(kept or None)
+        else:
+            resolved.append(s)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )
+
+
+# ------------------------------------------------------------------ norms --
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+# ------------------------------------------------------------------- rope --
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: (B, S, H, dh), positions: (B, S) or (S,) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, dh/2)
+    if ang.ndim == 2:  # (S, dh/2) -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, dh/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d_model))
+    out = jnp.zeros((seq, d_model), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+# ------------------------------------------------------------- activations --
+def activation(name: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu
+    if name in ("geglu", "gelu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def glu_split(h: jnp.ndarray, gated: bool, act_fn):
+    """Apply (gated) activation to the fc1 output."""
+    if gated:
+        g, u = jnp.split(h, 2, axis=-1)
+        return act_fn(g) * u
+    return act_fn(h)
+
+
+# ------------------------------------------------------------------- scans --
+def pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (>=1)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def chunked_scan(
+    f: Callable,
+    init,
+    xs,
+    length: int,
+    chunk: int,
+    remat: bool = True,
+):
+    """lax.scan over ``length`` steps in outer chunks with inner remat.
+
+    ``f(carry, x_t) -> (carry, y_t)``. xs is a pytree with leading axis
+    ``length``. Memory for backward is O(length/chunk boundary states +
+    one chunk of per-step residuals).
+    """
+    chunk = pick_chunk(length, chunk)
+    n_out = length // chunk
+
+    def reshape_leaf(x):
+        return x.reshape(n_out, chunk, *x.shape[1:])
+
+    xs_c = jax.tree.map(reshape_leaf, xs)
+
+    def inner(carry, xc):
+        return jax.lax.scan(f, carry, xc)
+
+    if remat:
+        inner = jax.checkpoint(inner, prevent_cse=False)
+
+    carry, ys = jax.lax.scan(inner, init, xs_c)
+
+    def unreshape_leaf(y):
+        return y.reshape(length, *y.shape[2:])
+
+    return carry, jax.tree.map(unreshape_leaf, ys)

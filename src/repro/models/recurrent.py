@@ -1,0 +1,294 @@
+"""Recurrent sequence mixers: Mamba-style selective SSM (Hymba's parallel
+head branch) and xLSTM cells (mLSTM matrix memory + sLSTM scalar memory).
+
+TPU adaptation notes (DESIGN.md §3): all *time-parallel* projections are
+hoisted out of the recurrence and MoR-quantized (they are the GEMM hot
+spots); the per-step recurrences run under a remat-chunked lax.scan with
+states sharded over the model axis (d_inner channels for Mamba, the value
+dim of the mLSTM matrix memory), so the 500k-token decode state stays
+O(d*state/TP) per chip.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MoRDotPolicy, mor_dot
+from repro.configs.base import ArchConfig
+
+from .common import activation, chunked_scan, constrain, rms_norm
+
+__all__ = ["mamba_mix", "mlstm_mix", "slstm_mix"]
+
+SCAN_CHUNK = 64
+
+
+# ------------------------------------------------------------------ mamba --
+def _causal_dw_conv(x, w, conv_state=None):
+    """Depthwise causal conv along time. x: (B, S, D); w: (cw, D).
+
+    Returns (y, new_state) where state is the trailing (cw-1) inputs.
+    """
+    B, S, D = x.shape
+    cw = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, cw - 1, D), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros((B, S, D), jnp.float32)
+    for i in range(cw):  # cw is tiny (4): unrolled taps
+        y = y + xp[:, i : i + S].astype(jnp.float32) * w[i].astype(
+            jnp.float32
+        )
+    new_state = xp[:, -(cw - 1) :]
+    return y.astype(x.dtype), new_state
+
+
+def mamba_mix(
+    p,
+    xn: jnp.ndarray,
+    tok,
+    policy: MoRDotPolicy,
+    cfg: ArchConfig,
+    mode: str,
+    cache: Optional[Dict[str, jnp.ndarray]],
+):
+    """Selective SSM branch. xn: (B, S, d) -> (B, S, d).
+
+    cache = {'h': (B, di, N) f32, 'conv': (B, cw-1, di)}.
+    """
+    B, S, d = xn.shape
+    di, N, cw = cfg.mamba_d_inner, cfg.ssm_state, cfg.conv_width
+
+    xz, st_in = mor_dot(xn, p["w_in"], tok["ssm_in"], policy)  # (B,S,2di)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", None, "model")
+
+    conv_state = cache["conv"] if cache is not None else None
+    x_c, new_conv = _causal_dw_conv(x_in, p["conv_w"], conv_state)
+    x_c = jax.nn.silu(x_c.astype(jnp.float32))
+
+    # Data-dependent SSM parameters (small projections, BF16 per paper
+    # policy -- only the big linears are quantized).
+    bc = jnp.einsum("bsd,dn->bsn", x_c, p["w_bc"].astype(jnp.float32))
+    B_t, C_t = jnp.split(bc, 2, axis=-1)  # (B, S, N) each
+    dt = jax.nn.softplus(
+        jnp.einsum(
+            "bsd,dr,re->bse",
+            x_c,
+            p["w_dt_down"].astype(jnp.float32),
+            p["w_dt_up"].astype(jnp.float32),
+        )
+        + p["dt_bias"].astype(jnp.float32)
+    )  # (B, S, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, N)
+
+    h0 = (
+        cache["h"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((B, di, N), jnp.float32)
+    )
+    h0 = constrain(h0, "batch", "model", None)
+
+    # The (di x N)-sized per-step quantities da = exp(dt*A) and
+    # dbx = dt*B*x are formed *inside* the step from the (di)- and
+    # (N)-sized streams: materializing them for all S costs S*di*N
+    # traffic (~16x the inputs) and dominated the hymba prefill memory
+    # roofline (Perf iteration H1).
+    def ssm_step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B,di), (B,N), (B,N), (B,di)
+        da_t = jnp.exp(dt_t[..., None] * A)
+        h = da_t * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        return h, jnp.einsum("bdn,bn->bd", h, c_t)
+
+    if mode == "decode":  # S == 1: one recurrence step, no scan.
+        new_h, y = ssm_step(h0, (dt[:, 0], B_t[:, 0], C_t[:, 0], x_c[:, 0]))
+        y = y[:, None]
+    else:
+        xs = (
+            jnp.moveaxis(dt, 1, 0),
+            jnp.moveaxis(B_t, 1, 0),
+            jnp.moveaxis(C_t, 1, 0),
+            jnp.moveaxis(x_c, 1, 0),
+        )
+        new_h, ys = chunked_scan(ssm_step, h0, xs, S, SCAN_CHUNK)
+        y = jnp.moveaxis(ys, 0, 1)  # (B, S, di)
+
+    y = y + x_c * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xn.dtype)
+    out, st_out = mor_dot(y, p["w_out"], tok["ssm_out"], policy)
+
+    new_cache = (
+        {"h": new_h.astype(jnp.float32), "conv": new_conv}
+        if mode in ("decode", "prefill")
+        else None
+    )
+    return out, new_cache, {"ssm_in": st_in, "ssm_out": st_out}
+
+
+# ------------------------------------------------------------------ mLSTM --
+def mlstm_mix(
+    p,
+    xn: jnp.ndarray,
+    tok,
+    policy: MoRDotPolicy,
+    cfg: ArchConfig,
+    mode: str,
+    cache,
+):
+    """xLSTM mLSTM block body (matrix memory, exponential gating).
+
+    cache = {'C': (B,H,dh,dh) f32, 'n': (B,H,dh) f32, 'm': (B,H) f32}.
+    """
+    B, S, d = xn.shape
+    H = cfg.n_heads
+    di = 2 * d  # xLSTM mLSTM expansion factor 2
+    dh = di // H
+
+    up, st_up = mor_dot(xn, p["w_up"], tok["up"], policy)  # (B,S,2di)
+    x_i, z = jnp.split(up, 2, axis=-1)
+    qkv, st_qkv = mor_dot(x_i, p["w_qkv"], tok["qkv"], policy)  # (B,S,3di)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, H, dh) * (dh**-0.5)
+    v = v.reshape(B, S, H, dh)
+    # Gate pre-activations (tiny projection, BF16).
+    gates = jnp.einsum(
+        "bsd,dg->bsg", x_i, p["w_gate"].astype(x_i.dtype)
+    ).astype(jnp.float32) + p["gate_bias"].astype(jnp.float32)
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)  # (B, S, H)
+
+    if cache is not None:
+        C0 = cache["C"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+    else:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    C0 = constrain(C0, "batch", None, "model", None)
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp  # (B,H,dh) x3, (B,H) x2
+        log_f = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(log_f + m, i_t)
+        i_p = jnp.exp(i_t - m_new)[..., None]
+        f_p = jnp.exp(log_f + m - m_new)[..., None]
+        C = f_p[..., None] * C + i_p[..., None] * (
+            v_t[..., :, None] * k_t[..., None, :]
+        )
+        n = f_p * n + i_p * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    if mode == "decode":
+        (C1, n1, m1), y = step(
+            (C0, n0, m0),
+            (
+                q[:, 0].astype(jnp.float32),
+                k[:, 0].astype(jnp.float32),
+                v[:, 0].astype(jnp.float32),
+                i_raw[:, 0],
+                f_raw[:, 0],
+            ),
+        )
+        y = y[:, None]  # (B, 1, H, dh)
+    else:
+        xs = (
+            jnp.moveaxis(q, 1, 0).astype(jnp.float32),
+            jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+            jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+            jnp.moveaxis(i_raw, 1, 0),
+            jnp.moveaxis(f_raw, 1, 0),
+        )
+        (C1, n1, m1), ys = chunked_scan(step, (C0, n0, m0), xs, S, SCAN_CHUNK)
+        y = jnp.moveaxis(ys, 0, 1)  # (B, S, H, dh)
+
+    y = rms_norm(y.reshape(B, -1, di).astype(xn.dtype), p["out_norm"])
+    y = y * jax.nn.silu(z)
+    out, st_dn = mor_dot(y, p["w_down"], tok["down"], policy)
+
+    new_cache = (
+        {"C": C1, "n": n1, "m": m1}
+        if mode in ("decode", "prefill")
+        else None
+    )
+    return out, new_cache, {"up": st_up, "qkv": st_qkv, "down": st_dn}
+
+
+# ------------------------------------------------------------------ sLSTM --
+def slstm_mix(
+    p,
+    xn: jnp.ndarray,
+    tok,
+    policy: MoRDotPolicy,
+    cfg: ArchConfig,
+    mode: str,
+    cache,
+):
+    """xLSTM sLSTM block body (scalar memory, block-diagonal recurrence).
+
+    cache = {'h','c','n','m'}: (B, d) f32 each.
+    The input projection W (d -> 4d) is time-parallel and MoR-quantized;
+    the per-step block-diagonal recurrence R stays BF16 (inside the scan).
+    """
+    B, S, d = xn.shape
+    H = cfg.n_heads
+    dh = d // H
+
+    wx, st_w = mor_dot(xn, p["w_x"], tok["wx"], policy)  # (B, S, 4d)
+    wx = wx.astype(jnp.float32)
+    R = p["r"].astype(jnp.float32)  # (H, dh, 4*dh)
+
+    if cache is not None:
+        h0, c0 = cache["h"].astype(jnp.float32), cache["c"].astype(jnp.float32)
+        n0, m0 = cache["n"].astype(jnp.float32), cache["m"].astype(jnp.float32)
+    else:
+        h0 = jnp.zeros((B, d), jnp.float32)
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+
+    def step(carry, wx_t):
+        h, c, n, m = carry
+        rh = jnp.einsum(
+            "bhk,hkg->bhg", h.reshape(B, H, dh), R
+        ).reshape(B, 4 * d)
+        pre = wx_t + rh
+        z_p, i_p, f_p, o_p = jnp.split(pre, 4, axis=-1)
+        z_t = jnp.tanh(z_p)
+        log_f = jax.nn.log_sigmoid(f_p)
+        m_new = jnp.maximum(log_f + m, i_p)
+        i_g = jnp.exp(i_p - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c = f_g * c + i_g * z_t
+        n = f_g * n + i_g
+        h = jax.nn.sigmoid(o_p) * (c / jnp.maximum(n, 1e-6))
+        return (h, c, n, m_new), h
+
+    if mode == "decode":
+        (h1, c1, n1, m1), y = step((h0, c0, n0, m0), wx[:, 0])
+        y = y[:, None]
+    else:
+        (h1, c1, n1, m1), ys = chunked_scan(
+            step, (h0, c0, n0, m0), jnp.moveaxis(wx, 1, 0), S, SCAN_CHUNK
+        )
+        y = jnp.moveaxis(ys, 0, 1)
+
+    # Gated feed-forward (factor 4/3, per the xLSTM block spec).
+    y = rms_norm(y.astype(xn.dtype), p["out_norm"])
+    hf, st_f1 = mor_dot(y, p["w_ff1"], tok["ff1"], policy)
+    g, u = jnp.split(hf, 2, axis=-1)
+    hf = jax.nn.silu(g) * u
+    out, st_f2 = mor_dot(hf, p["w_ff2"], tok["ff2"], policy)
+
+    new_cache = (
+        {"h": h1, "c": c1, "n": n1, "m": m1}
+        if mode in ("decode", "prefill")
+        else None
+    )
+    return out, new_cache, {"wx": st_w, "ff1": st_f1, "ff2": st_f2}

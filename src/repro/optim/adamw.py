@@ -1,0 +1,122 @@
+"""AdamW with f32 master weights + moments (Megatron-style mixed precision).
+
+Model params live in BF16; the optimizer state holds an f32 master copy
+plus Adam moments, all ZeRO-1-shardable (see repro.sharding.rules). The
+update runs on the master weights and re-casts to BF16 params.
+
+No optax in this environment -- this is a standalone implementation with
+global-norm clipping and a cosine LR schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "adamw_update",
+           "cosine_lr", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    final_lr: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    master: Any  # f32 master weights (pytree like params)
+    m: Any
+    v: Any
+    step: jnp.ndarray  # () int32
+
+
+def init_opt_state(params) -> OptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.final_lr + 0.5 * (cfg.peak_lr - cfg.final_lr) * (
+        1 + jnp.cos(jnp.pi * prog)
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads,
+    opt_state: OptState,
+    *,
+    decay_mask=None,
+) -> Tuple[Any, OptState, dict]:
+    """Returns (new bf16 params, new opt state, metrics)."""
+    step = opt_state.step + 1
+    lr = cosine_lr(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(
+        lambda g: g.astype(jnp.float32) * scale, grads
+    )
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g, opt_state.m, grads
+    )
+    new_v = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, opt_state.v, grads
+    )
+
+    if decay_mask is None:
+        decay_mask = jax.tree.map(
+            lambda p: 1.0 if p.ndim >= 2 else 0.0, opt_state.master
+        )
+
+    def upd(master, m, v, wd):
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * wd * master
+        return master - lr * delta
+
+    new_master = jax.tree.map(
+        upd, opt_state.master, new_m, new_v, decay_mask
+    )
+    new_params = jax.tree.map(
+        lambda p: p.astype(jnp.bfloat16), new_master
+    )
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, OptState(new_master, new_m, new_v, step), metrics

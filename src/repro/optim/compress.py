@@ -1,0 +1,93 @@
+"""Gradient compression for cross-pod reduction (beyond-paper).
+
+Two pieces:
+
+1. :func:`compress_decompress_grads` -- MoR/GAM-style FP8 round-trip on
+   gradient leaves, optionally with a persistent error-feedback residual
+   (the EF trick keeps the *accumulated* quantization error bounded, so
+   SGD/Adam trajectories track the uncompressed run). This is what a
+   compressed hierarchical all-reduce delivers numerically; in the jit
+   train step it models the cross-pod stage operating on FP8 payloads.
+
+2. :func:`make_pod_compressed_psum` -- the explicit collective for
+   shard_map-based trainers: within-pod reduction stays BF16 (GSPMD),
+   the cross-pod stage all-gathers real float8_e4m3fn payloads + per-leaf
+   scales (half the DCN/ICI bytes of a bf16 all-reduce) and sums locally
+   in f32. Used by the multi-pod perf experiments.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import E4M3
+
+__all__ = [
+    "compress_decompress_grads", "ef_init", "make_pod_compressed_psum",
+]
+
+
+def _q_roundtrip(g: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor GAM-scaled E4M3 round-trip in the gradient dtype."""
+    gf = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(gf))
+    scale = jnp.where(amax > 0, E4M3.amax / amax, 1.0)
+    q = jnp.clip(gf * scale, -E4M3.amax, E4M3.amax).astype(
+        jnp.float8_e4m3fn
+    )
+    return (q.astype(jnp.float32) / scale).astype(g.dtype)
+
+
+def ef_init(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_decompress_grads(
+    grads, mode: str = "fp8", ef_state: Optional[Any] = None
+) -> Tuple[Any, Optional[Any]] | Any:
+    """mode='fp8': plain round-trip. mode='fp8_ef': adds the residual from
+    the previous step before quantizing and returns the new residual."""
+    if mode == "fp8":
+        return jax.tree.map(_q_roundtrip, grads)
+    if mode == "fp8_ef":
+        assert ef_state is not None
+
+        def one(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q = _q_roundtrip(corrected)
+            return q.astype(g.dtype), corrected - q.astype(jnp.float32)
+
+        pairs = jax.tree.map(one, grads, ef_state)
+        new_g = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_e = jax.tree.map(lambda p: p[1], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_g, new_e
+    raise ValueError(mode)
+
+
+def make_pod_compressed_psum(axis_name: str = "pod"):
+    """Explicit FP8-compressed cross-pod sum for shard_map trainers.
+
+    g -> all_gather(fp8(g)) over ``axis_name`` -> dequant-sum in f32.
+    Halves the bytes crossing the pod boundary vs a bf16 all-reduce
+    (visible as f8 all-gather ops in the lowered HLO).
+    """
+
+    def psum_fp8(g: jnp.ndarray) -> jnp.ndarray:
+        gf = g.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(gf))
+        scale = jnp.where(amax > 0, E4M3.amax / amax, 1.0)
+        q = jnp.clip(gf * scale, -E4M3.amax, E4M3.amax).astype(
+            jnp.float8_e4m3fn
+        )
+        qs = jax.lax.all_gather(q, axis_name)  # (n_pods, ...) fp8 payload
+        ss = jax.lax.all_gather(scale, axis_name)  # (n_pods,) f32
+        deq = qs.astype(jnp.float32) / ss.reshape(
+            (-1,) + (1,) * (qs.ndim - 1)
+        )
+        return jnp.sum(deq, axis=0).astype(g.dtype)
+
+    return psum_fp8

@@ -1,0 +1,5 @@
+from .engine import Engine, Request, ServeConfig
+from .quantized import QTensor, qdot, quantize_params, quantize_weight
+
+__all__ = ["Engine", "Request", "ServeConfig", "QTensor", "qdot",
+           "quantize_params", "quantize_weight"]

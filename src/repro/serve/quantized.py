@@ -1,0 +1,134 @@
+"""Real-quantization path for serving: QTensor weights (FP8 payload +
+GAM scale metadata) decided ahead-of-time by the MoR metric.
+
+Training uses fake quantization (paper Fig. 4); at serving time the same
+MoR decision becomes a *storage* decision: tensors whose relative error
+passes th_E4M3 are stored as E4M3 bytes + (group mantissa, per-block E8M0
+exponents); the rest stay BF16. Matmuls against QTensors dequantize
+per-block (repro.kernels.fp8_gemm on TPU; jnp fallback elsewhere),
+halving weight HBM traffic for the quantized tensors -- decode is
+weight-bandwidth-bound, so this is the serving speedup (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import E4M3, MoRPolicy, Partition
+from repro.core.gam import compute_scales
+from repro.core.mor import partition_of, quant_dequant_with_scales
+from repro.core.metrics import relative_error
+
+__all__ = ["QTensor", "quantize_weight", "qdot", "quantize_params"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """FP8 payload + GAM scales, or a BF16 passthrough (data_bf16)."""
+
+    data_fp8: Optional[jnp.ndarray]  # (M, K) float8_e4m3fn scaled values
+    scale: Optional[jnp.ndarray]  # (nm, nk) f32 reconstructed scales
+    data_bf16: Optional[jnp.ndarray]
+    block: Tuple[int, int]
+    shape: Tuple[int, ...]
+
+    def tree_flatten(self):
+        return (
+            (self.data_fp8, self.scale, self.data_bf16),
+            (self.block, self.shape),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.data_fp8 is not None
+
+    def dequant(self) -> jnp.ndarray:
+        if not self.is_quantized:
+            return self.data_bf16
+        bm, bk = self.block
+        M, K = self.data_fp8.shape
+        xb = self.data_fp8.astype(jnp.float32).reshape(
+            M // bm, bm, K // bk, bk
+        )
+        xb = xb / self.scale[:, None, :, None]
+        return xb.reshape(M, K)[: self.shape[0], : self.shape[1]].astype(
+            jnp.bfloat16
+        )
+
+
+def _pad_to(x: jnp.ndarray, bm: int, bk: int) -> jnp.ndarray:
+    m, k = x.shape
+    return jnp.pad(x, ((0, (-m) % bm), (0, (-k) % bk)))
+
+
+def quantize_weight(
+    w: jnp.ndarray, policy: MoRPolicy
+) -> Tuple[QTensor, Dict[str, float]]:
+    """Apply the MoR tensor-level decision to one weight matrix.
+
+    Returns a QTensor (FP8 if the Eq. 2 metric accepts, else BF16) plus
+    decision stats. Host-side, ahead of serving.
+    """
+    assert w.ndim == 2
+    part = partition_of(policy)
+    scales = compute_scales(w, part, E4M3, algo=policy.algo)
+    wq = quant_dequant_with_scales(w, part, E4M3, scales)
+    err = float(relative_error(w, wq))
+    ok = policy.enabled and err < policy.threshold
+    bm, bk = part.resolve(w.shape)
+    if ok:
+        wp = _pad_to(w.astype(jnp.float32), bm, bk)
+        M, K = wp.shape
+        xb = wp.reshape(M // bm, bm, K // bk, bk)
+        payload = (
+            jnp.clip(
+                xb * scales.scale[:, None, :, None], -E4M3.amax, E4M3.amax
+            )
+            .astype(jnp.float8_e4m3fn)
+            .reshape(M, K)
+        )
+        qt = QTensor(payload, scales.scale, None, (bm, bk), tuple(w.shape))
+    else:
+        qt = QTensor(None, None, w.astype(jnp.bfloat16), (bm, bk),
+                     tuple(w.shape))
+    return qt, {"rel_err": err, "quantized": float(ok)}
+
+
+def qdot(x: jnp.ndarray, qw: QTensor) -> jnp.ndarray:
+    """x @ W for a QTensor weight (dequant-fused in XLA; fp8_gemm on TPU)."""
+    w = qw.dequant()
+    return jnp.dot(
+        x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def quantize_params(params, policy: MoRPolicy, min_size: int = 1 << 16):
+    """Quantize every >=2-D weight leaf of a model params tree; returns
+    (new tree with QTensor leaves where accepted, per-leaf stats)."""
+    stats: Dict[str, Dict[str, float]] = {}
+
+    def visit(path, leaf):
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        if (
+            hasattr(leaf, "ndim") and leaf.ndim == 2
+            and leaf.size >= min_size and "embed" not in name
+            and "norm" not in name
+        ):
+            qt, st = quantize_weight(leaf, policy)
+            stats[name] = st
+            return qt
+        return leaf
+
+    new = jax.tree_util.tree_map_with_path(visit, params)
+    return new, stats

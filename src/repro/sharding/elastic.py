@@ -1,0 +1,75 @@
+"""Elastic re-mesh: resume a checkpoint onto a different device topology.
+
+After node failures the healthy device set changes; this module rebuilds
+a (possibly smaller) mesh from whatever devices exist, re-derives the
+sharding specs for the new mesh, and device_puts the restored arrays --
+the checkpoint layout is topology-agnostic (full arrays on host), so any
+(data', model') factorization works as long as the model axis still
+divides the sharded dims (rules fall back to replication otherwise).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.sharding import rules
+
+__all__ = ["best_mesh_shape", "make_elastic_mesh", "reshard_tree"]
+
+
+def best_mesh_shape(
+    n_devices: int, prefer_model: int = 16
+) -> Tuple[int, int]:
+    """Largest (data, model) grid with model <= prefer_model that tiles
+    the healthy device count (drops remainder devices)."""
+    model = min(prefer_model, n_devices)
+    while model > 1 and n_devices // model == 0:
+        model //= 2
+    data = max(n_devices // model, 1)
+    return data, model
+
+
+def make_elastic_mesh(devices=None, prefer_model: int = 16) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    data, model = best_mesh_shape(len(devices), prefer_model)
+    used = devices[: data * model]
+    import numpy as np
+
+    return Mesh(
+        np.asarray(used).reshape(data, model), ("data", "model")
+    )
+
+
+def reshard_tree(tree, spec_tree, mesh: Mesh):
+    """device_put every leaf against its spec on the new mesh, demoting
+    specs whose sharded dims no longer divide."""
+
+    def put(leaf, spec):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        fixed = []
+        for dim, e in zip(leaf.shape, entries):
+            if e is None:
+                fixed.append(None)
+                continue
+            names = e if isinstance(e, tuple) else (e,)
+            size = 1
+            for n in names:
+                size *= mesh.shape.get(n, 1)
+            fixed.append(e if dim % size == 0 else None)
+        return jax.device_put(leaf, NamedSharding(mesh, P(*fixed)))
+
+    return jax.tree.map(put, tree, spec_tree,
+                        is_leaf=lambda x: hasattr(x, "ndim"))
+
+
+def elastic_restore(ckpt, step: int, target_shapes, cfg: ArchConfig,
+                    devices=None):
+    """Checkpoint -> host arrays -> new mesh shardings. Returns
+    (tree, mesh)."""
+    mesh = make_elastic_mesh(devices)
+    host_tree = ckpt.restore(step, target_shapes)
+    specs = rules.param_specs(cfg, host_tree)
+    return reshard_tree(host_tree, specs, mesh), mesh

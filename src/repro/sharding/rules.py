@@ -1,0 +1,175 @@
+"""Sharding rules: parameter, optimizer-state, batch and cache
+PartitionSpecs for every architecture.
+
+Megatron-style TP over 'model':
+  wqkv / fc1 / expert-w1  -> column-parallel (shard output features)
+  wo   / fc2 / expert-w2  -> row-parallel    (shard input features)
+  embeddings / lm_head    -> vocab-sharded
+  MoE experts             -> expert-parallel (shard E)
+  norms / small ssm vecs  -> replicated
+DP over ('pod','data') shards the batch. ZeRO-1: optimizer moments and
+f32 master weights are additionally sharded over 'data' on the largest
+dimension the param spec leaves free.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = [
+    "param_specs", "opt_state_spec_from_param", "batch_spec", "cache_specs_tree",
+    "named_shardings", "zero1_spec",
+]
+
+# name-fragment -> (spec builder). Matched against the flattened path.
+# Specs are for the *unstacked* per-layer shapes; stacked layer params get
+# a leading None inserted.
+
+
+def _leaf_spec(path: str, leaf) -> P:
+    ndim = leaf.ndim
+    # Embeddings / heads: vocab-sharded.
+    if path.endswith("embed") or path.endswith("lm_head"):
+        # embed (V, d) -> shard V; lm_head (d, V) -> shard V.
+        return P("model", None) if path.endswith("embed") else P(None, "model")
+    # Norm scales / biases / small vectors: replicated.
+    if ndim <= 1:
+        return P(*([None] * ndim))
+    # MoE experts (E, d, f): expert-parallel on E.
+    if "moe" in path and ("w1" in path or "w2" in path):
+        return P("model", None, None)
+    if "router" in path:
+        return P(None, None)
+    # Column-parallel (shard output dim).
+    col = ("wqkv", "wi", "w_in", "w_up", "w_qkv", "w_x", "xwq", "xwkv",
+           "w_ff1")
+    # Row-parallel (shard input dim).
+    row = ("wo", "w_out", "w_down", "xwo", "w_ff2")
+    last = path.split("/")[-1]
+    if last in col:
+        return P(*([None] * (ndim - 1)), "model")
+    if last in row:
+        return P("model", *([None] * (ndim - 1)))
+    if last == "r":  # sLSTM recurrence (H, dh, 4dh): head-sharded if even.
+        return P(None, None, None)
+    if last == "conv_w":
+        return P(None, "model")
+    if last in ("w_bc", "w_dt_down"):
+        return P("model", None)
+    if last == "w_dt_up":
+        return P(None, "model")
+    if last in ("A_log", "D", "dt_bias"):
+        return P("model", None) if ndim == 2 else P("model")
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ArchConfig, params_shape) -> Any:
+    """PartitionSpec pytree matching a params (shape) pytree.
+
+    Stacked block params (leading n_units axis) get a leading None.
+    """
+
+    def spec_for(path, leaf):
+        p = _path_str(path)
+        stacked = "blocks" in p
+        base = _leaf_spec(p, _Unstacked(leaf) if stacked else leaf)
+        if stacked:
+            return P(None, *base)
+        return base
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+class _Unstacked:
+    """Shape view dropping the stacked layer axis."""
+
+    def __init__(self, leaf):
+        self.ndim = leaf.ndim - 1
+        self.shape = leaf.shape[1:]
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], data_axes=("data",)) -> P:
+    """Extend a param spec with 'data' sharding on the largest free dim
+    divisible by the data-axis size (ZeRO-1 optimizer partitioning)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = None, 0
+    for i, (s, n) in enumerate(zip(entries, shape)):
+        if s is None and n % 16 == 0 and n > best_size:
+            best, best_size = i, n
+    if best is not None:
+        entries[best] = data_axes if len(data_axes) > 1 else data_axes[0]
+    return P(*entries)
+
+
+def opt_state_spec_from_param(cfg: ArchConfig, params_shape, multi_pod=False):
+    """Specs for (master, m, v) f32 optimizer triples: param spec + ZeRO-1."""
+    pspecs = param_specs(cfg, params_shape)
+    data_axes = ("data",)
+
+    def extend(spec, leaf):
+        return zero1_spec(spec, leaf.shape, data_axes)
+
+    return jax.tree.map(extend, pspecs, params_shape)
+
+
+def batch_spec(multi_pod: bool = False) -> P:
+    return P(("pod", "data") if multi_pod else "data")
+
+
+_TP = 16  # model-axis size of the production meshes
+
+
+def _cache_leaf_spec(path: str, shape, batch) -> P:
+    """Cache entries: (n_units, B, ...) -- batch over data axes; the kv
+    seq dim over 'model' when divisible (context-parallel decode,
+    DESIGN.md §4), else replicated over model."""
+    ndim = len(shape)
+
+    def tp_if(axis):
+        return "model" if shape[axis] % _TP == 0 else None
+
+    if path.endswith("/k") or path.endswith("/v") or path.endswith("xk") \
+            or path.endswith("xv"):
+        # (L, B, S, hkv, hd): shard S over model (works for any kv count).
+        return P(None, batch, tp_if(2), None, None)
+    if path.endswith("k_scale") or path.endswith("v_scale"):
+        return P(None, batch, tp_if(2), None)
+    if path.endswith("C"):
+        return P(None, batch, None, tp_if(3), None)
+    if path.endswith("conv"):
+        return P(None, batch, None, tp_if(3))
+    if path.endswith("/h") and ndim == 4:  # mamba h (L,B,di,N)
+        return P(None, batch, tp_if(2), None)
+    return P(None, batch, *([None] * (ndim - 2)))
+
+
+def cache_specs_tree(cfg: ArchConfig, cache_shape, multi_pod: bool = False):
+    batch = ("pod", "data") if multi_pod else "data"
+
+    def spec_for(path, leaf):
+        return _cache_leaf_spec("/" + _path_str(path), leaf.shape, batch)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def named_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,4 @@
+from .train_step import TrainConfig, make_train_step, summarize_mor_stats
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["TrainConfig", "make_train_step", "summarize_mor_stats", "Trainer", "TrainerConfig"]

@@ -1,0 +1,95 @@
+"""Chunked-attention invariants: masks, window-band scan, GQA grouping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import decode_attention, flash_attention
+
+
+def _ref(q, k, v, mask):
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d**-0.5)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+
+
+def _make(B=2, S=256, H=4, dh=32, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda s: jnp.asarray(rng.standard_normal((B, S, H, dh)),
+                               jnp.float32)
+    return mk(1), mk(2), mk(3)
+
+
+def test_causal_matches_reference():
+    q, k, v = _make()
+    S = q.shape[1]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    out = flash_attention(q, k, v, kind="causal", q_chunk=64, k_chunk=64)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(_ref(q, k, v, mask)), atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("window", [32, 100, 192])
+def test_sliding_window_band_matches_reference(window):
+    """The band-restricted kv scan must equal the full masked compute."""
+    q, k, v = _make(seed=1)
+    S = q.shape[1]
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = (j <= i) & (i - j < window)
+    out = flash_attention(
+        q, k, v, kind="sliding", window=window, q_chunk=64, k_chunk=64
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(_ref(q, k, v, mask)), atol=2e-4
+    )
+
+
+def test_prefix_lm_mask():
+    q, k, v = _make(seed=2)
+    S = q.shape[1]
+    P = 50
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = (j <= i) | (j < P)
+    out = flash_attention(
+        q, k, v, kind="prefix", prefix_len=P, q_chunk=64, k_chunk=64
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(_ref(q, k, v, mask)), atol=2e-4
+    )
+
+
+def test_gqa_grouping_consistent():
+    """GQA (kv=2, q=4) equals MHA with kv heads repeated."""
+    rng = np.random.default_rng(3)
+    B, S, dh = 2, 128, 16
+    q = jnp.asarray(rng.standard_normal((B, S, 4, dh)), jnp.float32)
+    k2 = jnp.asarray(rng.standard_normal((B, S, 2, dh)), jnp.float32)
+    v2 = jnp.asarray(rng.standard_normal((B, S, 2, dh)), jnp.float32)
+    out_gqa = flash_attention(q, k2, v2, kind="causal", q_chunk=64,
+                              k_chunk=64)
+    k4 = jnp.repeat(k2, 2, axis=2)
+    v4 = jnp.repeat(v2, 2, axis=2)
+    out_mha = flash_attention(q, k4, v4, kind="causal", q_chunk=64,
+                              k_chunk=64)
+    np.testing.assert_allclose(
+        np.asarray(out_gqa), np.asarray(out_mha), atol=1e-5
+    )
+
+
+def test_decode_matches_last_row_of_prefill():
+    """decode(q_T | cache) == flash row T for the same sequence."""
+    q, k, v = _make(B=1, S=64, seed=4)
+    full = flash_attention(q, k, v, kind="causal", q_chunk=32, k_chunk=32)
+    out = decode_attention(
+        q[:, -1:], k, v, jnp.asarray(63, jnp.int32)
+    )
+    np.testing.assert_allclose(
+        np.asarray(out)[0, 0], np.asarray(full)[0, -1], atol=2e-4
+    )

@@ -1,0 +1,104 @@
+"""Unit + property tests for GAM scaling (Algorithm 1)."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    E4M3,
+    E5M2,
+    PER_BLOCK_128,
+    PER_CHANNEL,
+    PER_TENSOR,
+    Partition,
+    compute_scales,
+    split_mantissa_exponent,
+)
+from repro.core.partition import block_amax
+
+jax.config.update("jax_enable_x64", False)
+
+PARTS = [PER_TENSOR, PER_BLOCK_128, PER_CHANNEL, Partition("block", (64, 64)),
+         Partition("subchannel", sub=32)]
+
+
+def test_split_mantissa_exponent_roundtrip():
+    s = jnp.array([1.0, 0.75, 448.0, 3.1e-5, 1e8, 2.0, 1.9999999], jnp.float32)
+    m, e = split_mantissa_exponent(s)
+    np.testing.assert_allclose(
+        np.asarray(m) * np.exp2(np.asarray(e, np.float64)), np.asarray(s),
+        rtol=1e-6,
+    )
+    assert np.all(np.asarray(m) >= 1.0) and np.all(np.asarray(m) < 2.0)
+
+
+@pytest.mark.parametrize("part", PARTS)
+@pytest.mark.parametrize("algo", ["gam", "e8m0", "fp32_amax"])
+def test_no_saturation_invariant(part, algo):
+    """block_amax * scale <= q_amax for every block (the Alg. 1 guarantee)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        rng.standard_normal((256, 384)) * np.exp(rng.uniform(-20, 20, (256, 384))),
+        jnp.float32,
+    )
+    for fmt in (E4M3, E5M2):
+        sc = compute_scales(x, part, fmt, algo=algo)
+        bmax = block_amax(x, part)
+        scaled = np.asarray(bmax) * np.asarray(sc.scale)
+        assert np.all(scaled <= fmt.amax * (1 + 1e-6)), (
+            f"{algo}/{fmt.name}: max scaled amax {scaled.max()}"
+        )
+
+
+def test_gam_shared_mantissa():
+    """Every reconstructed block scale shares the group mantissa m_g."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    sc = compute_scales(x, PER_BLOCK_128, E4M3, algo="gam")
+    m, _ = split_mantissa_exponent(sc.scale.reshape(-1))
+    np.testing.assert_allclose(
+        np.asarray(m), float(sc.group_mantissa), rtol=1e-6
+    )
+
+
+def test_group_amax_preserved_exactly():
+    """Per-tensor GAM scale maps the tensor amax to exactly fmt.amax."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    sc = compute_scales(x, PER_TENSOR, E4M3, algo="gam")
+    amax_scaled = float(sc.group_amax) * float(sc.scale[0, 0])
+    # GAM preserves the full fp32 mantissa of s_g; per-tensor (single block)
+    # the reconstruction equals s_g, so amax maps to q_amax exactly.
+    np.testing.assert_allclose(amax_scaled, E4M3.amax, rtol=1e-6)
+
+
+def test_zero_tensor_scales_are_finite():
+    x = jnp.zeros((128, 128), jnp.float32)
+    for algo in ("gam", "e8m0", "fp32_amax"):
+        sc = compute_scales(x, PER_BLOCK_128, E4M3, algo=algo)
+        assert np.all(np.isfinite(np.asarray(sc.scale)))
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(
+    data=hnp.arrays(
+        np.float32,
+        hnp.array_shapes(min_dims=2, max_dims=2, min_side=1, max_side=80),
+        elements=st.floats(
+            min_value=-(2.0**90), max_value=2.0**90, allow_nan=False, width=32
+        ),
+    ),
+    algo=st.sampled_from(["gam", "e8m0"]),
+    kind=st.sampled_from(["tensor", "block", "channel"]),
+)
+def test_property_no_saturation(data, algo, kind):
+    part = Partition(kind, (32, 32))
+    x = jnp.asarray(data)
+    sc = compute_scales(x, part, E4M3, algo=algo)
+    bmax = np.asarray(block_amax(x, part), np.float64)
+    scale = np.asarray(sc.scale, np.float64)
+    assert np.all(bmax * scale <= E4M3.amax * (1 + 1e-6))
+    assert np.all(np.isfinite(scale)) and np.all(scale > 0)

@@ -1,0 +1,215 @@
+"""Tests for the MoR framework recipes (Algorithm 2) and mor_dot."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BF16_BASELINE,
+    E4M3,
+    PER_BLOCK_128,
+    MoRPolicy,
+    Partition,
+    mor_dot,
+    mor_quantize,
+    new_token,
+    paper_default,
+    quant_dequant,
+    relative_error,
+)
+from repro.core.mor import STATS_WIDTH
+
+
+def _rand(shape, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------- recipes --
+def test_tensor_level_accepts_wellscaled():
+    x = _rand((256, 256))
+    pol = MoRPolicy(recipe="tensor", partition="block")
+    y, stats = mor_quantize(x, pol)
+    # Gaussian data quantizes well under per-block GAM: accepted.
+    assert float(stats[0]) == 1.0
+    err = float(relative_error(x, y))
+    assert err < 0.045
+    assert not np.allclose(np.asarray(y), np.asarray(x))  # actually quantized
+
+
+def test_tensor_level_rejects_wide_dynamic_range():
+    # Values spanning ~2^40 within each block force large relative error
+    # for small values -> fallback to BF16 (identity).
+    rng = np.random.default_rng(3)
+    mag = np.exp2(rng.uniform(-30, 30, (256, 256))).astype(np.float32)
+    x = jnp.asarray(mag * np.sign(rng.standard_normal((256, 256))))
+    pol = MoRPolicy(recipe="tensor", partition="tensor")
+    y, stats = mor_quantize(x, pol)
+    assert float(stats[0]) == 0.0
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_threshold_monotonicity():
+    """Raising the threshold can only flip decisions BF16 -> E4M3."""
+    x = _rand((128, 128), scale=100.0, seed=4)
+    decisions = []
+    for th in (1e-5, 0.01, 0.045, 0.5):
+        _, stats = mor_quantize(x, MoRPolicy(recipe="tensor", threshold=th))
+        decisions.append(float(stats[0]))
+    assert decisions == sorted(decisions)
+
+
+def test_sub2_blocks_mix():
+    # Half the tensor is benign, half has huge dynamic range per block.
+    rng = np.random.default_rng(5)
+    good = rng.standard_normal((128, 256)).astype(np.float32)
+    bad = (
+        np.exp2(rng.uniform(-34, 34, (128, 256))).astype(np.float32)
+        * np.sign(rng.standard_normal((128, 256)))
+    )
+    x = jnp.asarray(np.concatenate([good, bad], axis=0))
+    pol = MoRPolicy(recipe="sub2", partition="block")
+    y, stats = mor_quantize(x, pol)
+    f4, f5, fbf = float(stats[3]), float(stats[4]), float(stats[5])
+    assert f5 == 0.0  # two-way never selects E5M2
+    assert 0.0 < f4 < 1.0 and 0.0 < fbf < 1.0
+    # BF16 blocks are bit-identical to the input.
+    yb = np.asarray(y)[128:]
+    xb = np.asarray(x)[128:]
+    # At least the rows in fallback blocks should match exactly somewhere:
+    assert np.mean(yb == xb) > 0.1
+
+
+def test_sub3_uses_e5m2():
+    # Moderate dynamic range: too wide for E4M3's ~2^17 span per block,
+    # within E5M2's ~2^29 normal span (Eq. 4).
+    rng = np.random.default_rng(6)
+    mag = np.exp2(rng.uniform(-12, 12, (128, 128))).astype(np.float32)
+    x = jnp.asarray(mag)
+    pol = MoRPolicy(recipe="sub3", partition="tensor")
+    y, stats = mor_quantize(x, pol)
+    assert float(stats[4]) > 0.0  # some E5M2 usage
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_quant_dequant_idempotent():
+    """Q(Q(x)) == Q(x): fake-quantized values are fixed points."""
+    x = _rand((128, 128), seed=7)
+    y1, sc = quant_dequant(x, PER_BLOCK_128, E4M3)
+    y2, _ = quant_dequant(y1, PER_BLOCK_128, E4M3)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0, atol=0)
+
+
+def test_rel_err_bounded_by_format_eps():
+    """For benign data, per-element rel-err <= 2^-4 + scale rounding slack."""
+    x = _rand((256, 256), seed=8)
+    y, _ = quant_dequant(x, PER_BLOCK_128, E4M3)
+    err = float(relative_error(x, y))
+    # E4M3 eps = 2^-4 = 6.25%; mean err should be well under that.
+    assert err < E4M3.eps
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(
+    data=hnp.arrays(
+        np.float32,
+        hnp.array_shapes(min_dims=2, max_dims=2, min_side=2, max_side=64),
+        elements=st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                           width=32),
+    ),
+    recipe=st.sampled_from(["tensor", "sub2", "sub3"]),
+)
+def test_property_mor_finite_and_shaped(data, recipe):
+    x = jnp.asarray(data)
+    pol = MoRPolicy(recipe=recipe, partition="block", block_shape=(32, 32))
+    y, stats = mor_quantize(x, pol)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert stats.shape == (STATS_WIDTH,)
+    assert np.all(np.isfinite(np.asarray(stats)))
+    # Fractions sum to ~1.
+    s = np.asarray(stats)
+    np.testing.assert_allclose(s[3] + s[4] + s[5], 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------- mor_dot --
+def test_mor_dot_matches_plain_dot_when_off():
+    x = _rand((4, 32, 64), seed=9)
+    w = _rand((64, 48), seed=10)
+    y, stats = mor_dot(x, w, new_token(), BF16_BASELINE)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x) @ np.asarray(w), rtol=1e-4, atol=1e-4
+    )
+    assert float(jnp.sum(jnp.abs(stats))) == 0.0
+
+
+def test_mor_dot_close_to_plain_dot_when_on():
+    x = _rand((8, 64), seed=11)
+    w = _rand((64, 32), seed=12)
+    y, stats = mor_dot(x, w, new_token(), paper_default())
+    ref = np.asarray(x) @ np.asarray(w)
+    rel = np.abs(np.asarray(y) - ref) / (np.abs(ref) + 1e-3)
+    assert np.median(rel) < 0.15  # fp8-level fidelity on the GEMM output
+    assert float(stats[0, 0]) in (0.0, 1.0)
+
+
+def test_mor_dot_grads_flow_and_token_carries_stats():
+    x = _rand((16, 64), seed=13)
+    w = _rand((64, 32), seed=14)
+    tok = new_token()
+    pol = paper_default()
+
+    def loss(x, w, tok):
+        y, _ = mor_dot(x, w, tok, pol)
+        return jnp.sum(y**2)
+
+    (dx, dw, dtok) = jax.grad(loss, argnums=(0, 1, 2))(x, w, tok)
+    assert dx.shape == x.shape and dw.shape == w.shape
+    assert np.all(np.isfinite(np.asarray(dx)))
+    assert np.all(np.isfinite(np.asarray(dw)))
+    # Bwd stats rode out through the token cotangent.
+    assert dtok.shape == tok.shape
+    assert float(jnp.max(dtok[:, 2])) > 0.0  # amax entries populated
+
+    # Gradients approximate the unquantized ones.
+    def loss_ref(x, w):
+        return jnp.sum((x @ w) ** 2)
+
+    rx, rw = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    cos = float(
+        jnp.sum(dx * rx)
+        / (jnp.linalg.norm(dx) * jnp.linalg.norm(rx) + 1e-9)
+    )
+    assert cos > 0.98
+
+
+def test_mor_dot_jit_and_vmap():
+    pol = paper_default("sub2")
+    x = _rand((4, 8, 32), seed=15)
+    w = _rand((4, 32, 16), seed=16)
+
+    @jax.jit
+    def f(x, w):
+        return jax.vmap(lambda a, b: mor_dot(a, b, new_token(), pol))(x, w)
+
+    y, stats = f(x, w)
+    assert y.shape == (4, 8, 16)
+    assert stats.shape[0] == 4
+
+
+@pytest.mark.parametrize("partition", ["tensor", "block", "channel"])
+def test_mor_dot_partitions_all_work(partition):
+    pol = paper_default(partition=partition)
+    x = _rand((32, 96), seed=17)
+    w = _rand((96, 64), seed=18)
+
+    def loss(x, w, tok):
+        y, _ = mor_dot(x, w, tok, pol)
+        return jnp.sum(y**2)
+
+    g = jax.grad(loss, argnums=(0, 1))(x, w, new_token())
+    for arr in g:
+        assert np.all(np.isfinite(np.asarray(arr)))

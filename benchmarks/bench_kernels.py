@@ -9,10 +9,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import E4M3, PER_BLOCK_128, MoRPolicy, mor_quantize
-from repro.core.partition import Partition
+from repro.core import E4M3, E5M2, PER_BLOCK_128, MoRPolicy, mor_quantize
+from repro.core.formats import cast_to_format
+from repro.core.gam import scales_from_bmax
+from repro.core.metrics import E5M2_RANGE_RATIO
+from repro.core.partition import Partition, from_blocks, to_blocks
 from repro.kernels import ref as kref
-from repro.kernels.ops import gam_quant
+from repro.kernels.ops import gam_quant, mor_select
+from repro.launch.hlo_analysis import analyze_hlo
 
 from .common import csv_row
 
@@ -25,6 +29,77 @@ def _time(fn, *args, iters=10):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters * 1e6  # us
+
+
+def _hlo_stats(fn, x, *args):
+    """(HBM-traffic bytes, operand-sized instruction count) of jit(fn).
+
+    The instruction count is the number of optimized (post-fusion) HLO
+    instructions whose text mentions the operand's shape -- i.e. how many
+    times XLA touches an operand-sized buffer: the 'pass count'.
+    """
+    txt = jax.jit(fn).lower(x, *args).compile().as_text()
+    shape_tok = f"[{x.shape[0]},{x.shape[1]}]"
+    passes = sum(
+        1
+        for ln in txt.splitlines()
+        if shape_tok in ln and "= " in ln and "parameter(" not in ln
+    )
+    return analyze_hlo(txt).bytes, passes
+
+
+def _tpu_kernel_launches(fn, x):
+    """Count fused-kernel launches in the TPU lowering of jit(fn).
+
+    Cross-lowered on CPU (no TPU needed): the Pallas path becomes a
+    single tpu_custom_call -- the whole sub-tensor selection is one
+    XLA-visible pass over the operand (plus the global-amax reduce).
+    """
+    txt = jax.jit(fn).trace(x).lower(lowering_platforms=("tpu",)).as_text()
+    return txt.count("tpu_custom_call")
+
+
+def _three_pass_sub3(x2d):
+    """The pre-refactor sub3 lowering: three full passes over the operand
+    (E4M3 quant+err, E5M2 quant+err, abs/min/max Eq. 4 range pass).
+    Kept here verbatim as the fused-select benchmark baseline."""
+    part = PER_BLOCK_128
+
+    def quant_err(xb, fmt):
+        bmax = jnp.max(jnp.abs(xb), axis=(2, 3)).astype(jnp.float32)
+        scales = scales_from_bmax(bmax, fmt, "gam")
+        s = scales.scale[:, :, None, None]
+        xqb = (cast_to_format(xb.astype(jnp.float32) * s, fmt) / s).astype(
+            xb.dtype
+        )
+        xf = xb.astype(jnp.float32)
+        nz = xf != 0.0
+        err = jnp.where(
+            nz,
+            jnp.abs((xf - xqb.astype(jnp.float32)) / jnp.where(nz, xf, 1.0)),
+            0.0,
+        )
+        return xqb, jnp.sum(err, (2, 3)), jnp.sum(nz, (2, 3))
+
+    xb = to_blocks(x2d, part)
+    q4b, e4, n = quant_err(xb, E4M3)                    # pass 1
+    q5b, e5, _ = quant_err(xb, E5M2)                    # pass 2
+    m1 = e4 < e5
+    xabs = jnp.abs(xb)                                  # pass 3
+    bmax = jnp.max(xabs, axis=(2, 3)).astype(jnp.float32)
+    big = jnp.asarray(jnp.finfo(xb.dtype).max, xb.dtype)
+    bmin = jnp.min(jnp.where(xb != 0, xabs, big), axis=(2, 3)).astype(
+        jnp.float32
+    )
+    anynz = n > 0
+    ratio = jnp.where(anynz, bmax / jnp.where(anynz, bmin, 1.0), 1.0)
+    use5 = jnp.logical_and(jnp.logical_not(m1), ratio < E5M2_RANGE_RATIO)
+    y = from_blocks(
+        jnp.where(m1[:, :, None, None], q4b,
+                  jnp.where(use5[:, :, None, None], q5b, xb)),
+        x2d.shape,
+    )
+    return y
 
 
 def main():
@@ -42,6 +117,51 @@ def main():
             csv_row(f"kernel/mor_quantize_{mkn[0]}x{mkn[1]}", us,
                     f"GB/s={gbps:.1f}")
         )
+
+    # Fused sub-tensor select vs the pre-refactor 3-pass lowering.
+    part = PER_BLOCK_128
+    for mkn in ((1024, 1024), (4096, 1024)):
+        x = jnp.asarray(rng.standard_normal(mkn), jnp.bfloat16)
+
+        def fused_xla(a):
+            return mor_select(a, part, "sub3", "gam", backend="xla").y
+
+        def fused_pallas(a):
+            return mor_select(a, part, "sub3", "gam", backend="pallas").y
+
+        us_l = _time(jax.jit(_three_pass_sub3), x)
+        us_f = _time(jax.jit(fused_xla), x)
+        by_l, ps_l = _hlo_stats(_three_pass_sub3, x)
+        by_f, ps_f = _hlo_stats(fused_xla, x)
+        try:
+            launches = _tpu_kernel_launches(fused_pallas, x)
+        except Exception:  # older jax without cross-platform lowering
+            launches = -1
+        tag = f"{mkn[0]}x{mkn[1]}"
+        rows.append(
+            csv_row(f"kernel/sub3_3pass_{tag}", us_l,
+                    f"hbm_bytes={by_l:.0f};operand_passes={ps_l}")
+        )
+        rows.append(
+            csv_row(f"kernel/sub3_fused_xla_{tag}", us_f,
+                    f"hbm_bytes={by_f:.0f};operand_passes={ps_f};"
+                    f"speedup={us_l / us_f:.2f}x")
+        )
+        rows.append(
+            csv_row(f"kernel/sub3_fused_pallas_{tag}", 0.0,
+                    f"tpu_kernel_launches={launches};"
+                    "operand_passes=2(amax reduce + fused select);"
+                    f"vs_3pass_passes={ps_l}")
+        )
+
+    # mor_select pallas kernel (interpret mode on CPU).
+    x = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+    us = _time(
+        lambda a: mor_select(a, part, "sub3", "gam", backend="interpret").y,
+        x, iters=3,
+    )
+    rows.append(csv_row("kernel/mor_select_interp_512", us,
+                        "mode=interpret"))
 
     # gam_quant pallas kernel (interpret mode on CPU).
     x = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)

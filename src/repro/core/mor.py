@@ -7,6 +7,13 @@ dynamic decisions are data-dependent *selects*, exactly matching the paper's
 fake-quantization workflow (Fig. 4) where both representations exist
 transiently and one is chosen from live numerics.
 
+Every quantization event dispatches through the backend-resolved entry
+points in :mod:`repro.kernels.ops` (`quant_err` for the one-format
+recipes, `mor_select` for the sub-tensor recipes), so the fused Pallas
+kernels, their interpret-mode validation, and the pure-jnp XLA lowering
+share one implementation. The recipe layer only aggregates the per-block
+sums into decisions and the stats vector below.
+
 Stats vector layout (f32, STATS_WIDTH):
   [0] decision        1.0 if the preferred low-precision type was accepted
                       (tensor-level), or fraction of blocks in E4M3 (sub-*).
@@ -25,15 +32,14 @@ from typing import Tuple
 import jax.numpy as jnp
 
 from .formats import E4M3, E5M2, FormatSpec, cast_to_format
-from .gam import GamScales, compute_scales, scales_from_bmax
-from .metrics import (
-    E5M2_RANGE_RATIO,
-    block_dynamic_range_ok,
-    block_relative_error_sums,
-    relative_error,
-)
+from .gam import GamScales, compute_scales
 from .partition import Partition, from_blocks, to_blocks
 from .policy import MoRPolicy
+
+# Imported after every core sibling so the core -> kernels -> core-submodule
+# import chain stays acyclic (kernels only touches formats/gam/metrics/
+# partition, all loaded above).
+from repro.kernels import ops as kops
 
 __all__ = [
     "STATS_WIDTH",
@@ -87,31 +93,6 @@ def _stats(
     )
 
 
-def _fused_quant_err(xb: jnp.ndarray, fmt: FormatSpec, algo: str):
-    """Single-pass quantize + per-block error sums on a blocked view.
-
-    xb: (nm, nk, bm, bk) in its *original* dtype (bf16 in training -- the
-    paper's Fig. 4 pipeline is BF16-in/BF16-out, so large intermediates
-    never materialize in f32; per-block scale math runs in f32 on the tiny
-    (nm, nk) arrays). Returns (xqb in xb.dtype, scales, err_sums, counts).
-    This is the XLA analogue of the fused gam_quant Pallas kernel and the
-    subject of §Perf iterations 1-2.
-    """
-    bmax = jnp.max(jnp.abs(xb), axis=(2, 3)).astype(jnp.float32)
-    scales = scales_from_bmax(bmax, fmt, algo)
-    s = scales.scale[:, :, None, None]
-    xqb_f32 = cast_to_format(xb.astype(jnp.float32) * s, fmt) / s
-    xqb = xqb_f32.astype(xb.dtype)  # Fig. 4: output stays BF16
-    xf = xb.astype(jnp.float32)
-    nz = xf != 0.0
-    err = jnp.where(
-        nz,
-        jnp.abs((xf - xqb.astype(jnp.float32)) / jnp.where(nz, xf, 1.0)),
-        0.0,
-    )
-    return xqb, scales, jnp.sum(err, (2, 3)), jnp.sum(nz, (2, 3))
-
-
 def _tensor_level(x2d: jnp.ndarray, policy: MoRPolicy):
     """Tensor-level MoR [E4M3, BF16] (paper §3.1).
 
@@ -120,81 +101,66 @@ def _tensor_level(x2d: jnp.ndarray, policy: MoRPolicy):
     errors aggregated globally (Fig. 2) vs the Eq. 2 threshold.
     """
     part = partition_of(policy)
-    xb = to_blocks(x2d, part)
-    xqb, scales, err_sums, counts = _fused_quant_err(xb, E4M3, policy.algo)
-    n = jnp.maximum(jnp.sum(counts.astype(jnp.float32)), 1.0)
-    err = jnp.sum(err_sums) / n
+    q = kops.quant_err(
+        x2d, part, E4M3, policy.algo, backend=policy.backend
+    )
+    n = jnp.maximum(jnp.sum(q.counts), 1.0)
+    err = jnp.sum(q.err_sums) / n
     ok = err < policy.threshold
-    y = from_blocks(jnp.where(ok, xqb, xb), x2d.shape)
+    y = jnp.where(ok, q.y, x2d)
     okf = ok.astype(jnp.float32)
-    nz = jnp.sum(counts) / jnp.float32(x2d.size)
+    nz = jnp.sum(q.counts) / jnp.float32(x2d.size)
     stats = _stats(
-        okf, err, scales.group_amax, okf, 0.0, 1.0 - okf, nz,
-        scales.group_mantissa,
+        okf, err, q.group_amax, okf, 0.0, 1.0 - okf, nz, q.group_mantissa,
     )
     return y, stats
 
 
 def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
-    """Sub-tensor MoR (paper §3.2): two-way or three-way per-block choice."""
+    """Sub-tensor MoR (paper §3.2): two-way or three-way per-block choice.
+
+    The whole per-block pipeline -- both fp8 candidates, the Eq. 3 error
+    comparison and (sub3) the Eq. 4 dynamic-range gate -- runs in one
+    fused pass per block (`kops.mor_select`); only the stats aggregation
+    lives here.
+    """
     part = partition_of(policy)
-    xb = to_blocks(x2d, part)
-
-    q4b, scales4, e4_sum, n = _fused_quant_err(xb, E4M3, policy.algo)
-    q5b, _, e5_sum, _ = _fused_quant_err(xb, E5M2, policy.algo)
-
-    m1 = e4_sum < e5_sum  # Eq. 3: E4M3 beats E5M2 on total rel-err.
-
-    nblocks = jnp.float32(m1.size)
-    nz = jnp.sum(n) / jnp.float32(x2d.size)
-    tot_n = jnp.maximum(jnp.sum(n.astype(jnp.float32)), 1.0)
-    global_e4_err = jnp.sum(e4_sum) / tot_n
-    m1b = m1[:, :, None, None]
+    r = kops.mor_select(
+        x2d, part, mode=policy.recipe, algo=policy.algo,
+        backend=policy.backend,
+    )
+    nblocks = jnp.float32(r.sel.size)
+    nz = jnp.sum(r.counts) / jnp.float32(x2d.size)
+    tot_n = jnp.maximum(jnp.sum(r.counts), 1.0)
+    global_e4_err = jnp.sum(r.e4_sums) / tot_n
+    f4 = jnp.sum((r.sel == 0).astype(jnp.float32)) / nblocks
 
     if policy.recipe == "sub2":
-        # Two-way: E4M3 if it beats the E5M2 *benchmark*, else straight BF16.
-        y = from_blocks(jnp.where(m1b, q4b, xb), x2d.shape)
-        f4 = jnp.sum(m1) / nblocks
         stats = _stats(
-            f4, global_e4_err, scales4.group_amax, f4, 0.0, 1.0 - f4, nz,
-            scales4.group_mantissa,
+            f4, global_e4_err, r.group_amax, f4, 0.0, 1.0 - f4, nz,
+            r.group_mantissa,
         )
-        return y, stats
+        return r.y, stats
 
-    # Three-way: E4M3 -> E5M2 (Eq. 4 dynamic-range gate) -> BF16.
-    xabs = jnp.abs(xb)
-    anynz = n > 0
-    bmax = jnp.max(xabs, axis=(2, 3)).astype(jnp.float32)
-    big = jnp.asarray(jnp.finfo(xb.dtype).max, xb.dtype)
-    bmin = jnp.min(jnp.where(xb != 0, xabs, big), axis=(2, 3)).astype(
-        jnp.float32
-    )
-    ratio = jnp.where(anynz, bmax / jnp.where(anynz, bmin, 1.0), 1.0)
-    m2 = ratio < E5M2_RANGE_RATIO
-    use5 = jnp.logical_and(jnp.logical_not(m1), m2)
-    y = from_blocks(
-        jnp.where(m1b, q4b, jnp.where(use5[:, :, None, None], q5b, xb)),
-        x2d.shape,
-    )
-    f4 = jnp.sum(m1) / nblocks
-    f5 = jnp.sum(use5) / nblocks
+    f5 = jnp.sum((r.sel == 1).astype(jnp.float32)) / nblocks
     stats = _stats(
-        f4, global_e4_err, scales4.group_amax, f4, f5, 1.0 - f4 - f5, nz,
-        scales4.group_mantissa,
+        f4, global_e4_err, r.group_amax, f4, f5, 1.0 - f4 - f5, nz,
+        r.group_mantissa,
     )
-    return y, stats
+    return r.y, stats
 
 
 def _static_e4m3(x2d: jnp.ndarray, policy: MoRPolicy):
     part = partition_of(policy)
-    xb = to_blocks(x2d, part)
-    xqb, scales, err_sums, counts = _fused_quant_err(xb, E4M3, policy.algo)
-    n = jnp.maximum(jnp.sum(counts.astype(jnp.float32)), 1.0)
-    err = jnp.sum(err_sums) / n
-    nz = jnp.sum(counts) / jnp.float32(x2d.size)
-    stats = _stats(1.0, err, scales.group_amax, 1.0, 0.0, 0.0, nz,
-                   scales.group_mantissa)
-    return from_blocks(xqb, x2d.shape), stats
+    q = kops.quant_err(
+        x2d, part, E4M3, policy.algo, backend=policy.backend
+    )
+    n = jnp.maximum(jnp.sum(q.counts), 1.0)
+    err = jnp.sum(q.err_sums) / n
+    nz = jnp.sum(q.counts) / jnp.float32(x2d.size)
+    stats = _stats(1.0, err, q.group_amax, 1.0, 0.0, 0.0, nz,
+                   q.group_mantissa)
+    return q.y, stats
 
 
 def mor_quantize(

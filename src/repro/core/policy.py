@@ -31,6 +31,10 @@ class MoRPolicy:
       'e4m3'     -- always-quantize static recipe (no dynamic decision);
                     useful as the non-MoR FP8 baseline.
     partition: 'tensor' | 'block' | 'channel' | 'subchannel'
+    backend: 'auto' | 'pallas' | 'interpret' | 'xla' -- which lowering the
+      quantization events of this policy use (see repro.kernels.ops;
+      'auto' resolves to the Pallas kernels on TPU, interpret mode under
+      REPRO_KERNEL_INTERPRET=1, and the XLA reference otherwise).
     """
 
     recipe: str = "tensor"
@@ -39,6 +43,7 @@ class MoRPolicy:
     sub: int = 128
     threshold: float = 0.045  # th_E4M3, paper default 4.5%
     algo: str = "gam"  # 'gam' | 'e8m0' | 'fp32_amax'
+    backend: str = "auto"  # 'auto' | 'pallas' | 'interpret' | 'xla'
 
     @property
     def enabled(self) -> bool:

@@ -1,3 +1,21 @@
-from .ops import flash_attention, fp8_gemm, gam_quant, resolve_backend
+from .ops import (
+    MorSelect,
+    QuantErr,
+    flash_attention,
+    fp8_gemm,
+    gam_quant,
+    mor_select,
+    quant_err,
+    resolve_backend,
+)
 
-__all__ = ["flash_attention", "fp8_gemm", "gam_quant", "resolve_backend"]
+__all__ = [
+    "MorSelect",
+    "QuantErr",
+    "flash_attention",
+    "fp8_gemm",
+    "gam_quant",
+    "mor_select",
+    "quant_err",
+    "resolve_backend",
+]

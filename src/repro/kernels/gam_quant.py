@@ -21,12 +21,17 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["gam_quant_blocks"]
 
 
 def _split_me(s):
-    """Bit-level (mantissa in [1,2), exponent) of positive f32 s."""
+    """Bit-level (mantissa in [1,2), exponent) of positive f32 (1, 1) s.
+
+    s must be a (1, 1) vector, not a scalar: Mosaic's tpu.bitcast only
+    accepts vector operands.
+    """
     bits = jax.lax.bitcast_convert_type(s, jnp.int32)
     e = ((bits >> 23) & 0xFF) - 127
     m = jax.lax.bitcast_convert_type(
@@ -44,10 +49,13 @@ def _exp2i(e):
 
 def _kernel(mg_ref, x_ref, out_ref, exp_ref, err_ref, cnt_ref,
             *, q_amax: float, out_dtype, algo: str):
+    i, j = pl.program_id(0), pl.program_id(1)
     x = x_ref[...].astype(jnp.float32)
     m_g = mg_ref[0, 0]
 
-    bmax = jnp.max(jnp.abs(x))
+    # (1, 1) block amax: the exponent/mantissa bit arithmetic must run on
+    # vectors (Mosaic's tpu.bitcast rejects scalars).
+    bmax = jnp.max(jnp.abs(x), axis=(0, 1), keepdims=True)
     safe_b = jnp.where(bmax > 0, bmax, 1.0)
     s_b = q_amax / safe_b
     m_b, e_b = _split_me(s_b)
@@ -71,9 +79,12 @@ def _kernel(mg_ref, x_ref, out_ref, exp_ref, err_ref, cnt_ref,
     rel = jnp.where(nz, jnp.abs((x - xq) / jnp.where(nz, x, 1.0)), 0.0)
 
     out_ref[...] = xq_stored
-    exp_ref[0, 0] = e_b.astype(jnp.int32)
-    err_ref[0, 0] = jnp.sum(rel)
-    cnt_ref[0, 0] = jnp.sum(nz.astype(jnp.float32))
+    # The (nm, nk) stat outputs live whole in SMEM across the grid (TPU
+    # tiling forbids (1, 1) VMEM blocks and VMEM rejects scalar stores);
+    # each step writes its own cell.
+    exp_ref[i, j] = e_b[0, 0].astype(jnp.int32)
+    err_ref[i, j] = jnp.sum(rel)
+    cnt_ref[i, j] = jnp.sum(nz.astype(jnp.float32))
 
 
 @functools.partial(
@@ -120,9 +131,9 @@ def gam_quant_blocks(
         ],
         out_specs=[
             pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_shape=out_shapes,
         interpret=interpret,

@@ -1,0 +1,185 @@
+"""Fused sub-tensor MoR selection kernel (Pallas, TPU target).
+
+One VMEM-resident pass per block realizes the whole §3.2 per-block
+decision that the XLA lowering previously spread over three full passes
+of the operand (E4M3 quant+error, E5M2 quant+error, abs/min/max range
+pass). Per (bm, bk) block the kernel computes:
+
+  * both fp8 candidates, each GAM-scaled (Alg. 1) with its format's own
+    group mantissa (reconstructed from the shared exponent-bitcast
+    arithmetic used by ``gam_quant_blocks`` -- Mosaic has no frexp),
+  * the per-block relative-error sums of both candidates (Eq. 3),
+  * the nonzero min/max dynamic-range ratio for the Eq. 4 E5M2 gate,
+
+and writes the *selected* fake-quantized block (E4M3 / E5M2 / original
+BF16 passthrough) plus the per-block selection id and stats. The operand
+is read from HBM exactly once and only the winner is written back.
+
+Selection ids: 0 = E4M3, 1 = E5M2, 2 = BF16 (original values).
+
+Modes mirror the paper's recipes:
+  * ``sub2``: E4M3 iff it beats the E5M2 benchmark (Eq. 3), else BF16.
+  * ``sub3``: E4M3 -> E5M2 (Eq. 4 range gate) -> BF16.
+
+Grid: (M/bm, K/bk). Group mantissas for both formats come in as a (1, 2)
+block computed outside the kernel from the global amax (one cheap XLA
+reduce), exactly like ``gam_quant_blocks``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mor_select_blocks"]
+
+_F32_BIG = 3.4028235e38  # finfo(f32).max: filler for the nonzero-min reduce
+
+
+def _split_me(s):
+    """Bit-level (mantissa in [1,2), exponent) of positive f32 s.
+
+    s must be a (1, 1) vector, not a scalar: Mosaic's tpu.bitcast only
+    accepts vector operands.
+    """
+    bits = jax.lax.bitcast_convert_type(s, jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    m = jax.lax.bitcast_convert_type(
+        (bits & 0x7FFFFF) | (127 << 23), jnp.float32
+    )
+    return m, e
+
+
+def _exp2i(e):
+    e = jnp.clip(e, -126, 126)
+    return jax.lax.bitcast_convert_type(
+        (e + 127) << 23, jnp.float32
+    )
+
+
+def _kernel(mg_ref, x_ref, y_ref, sel_ref, e4_ref, e5_ref, cnt_ref,
+            *, q_amax4: float, q_amax5: float, dt4, dt5,
+            mode: str, algo: str, range_ratio: float):
+    i, j = pl.program_id(0), pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)
+    ax = jnp.abs(x)
+    bmax = jnp.max(ax)
+    # (1, 1) view of the block amax: the exponent/mantissa bit arithmetic
+    # must run on vectors (Mosaic's tpu.bitcast rejects scalars).
+    bmax11 = jnp.max(ax, axis=(0, 1), keepdims=True)
+    safe_b = jnp.where(bmax11 > 0, bmax11, 1.0)
+    nz = x != 0.0
+    cnt = jnp.sum(nz.astype(jnp.float32))
+
+    def candidate(q_amax, m_g, out_dtype):
+        s_b = q_amax / safe_b  # (1, 1)
+        m_b, e_b = _split_me(s_b)
+        if algo == "gam":
+            # Alg. 1 rounding: avoid saturation when m_g > m_b.
+            e_b = jnp.where(m_g <= m_b, e_b, e_b - 1)
+            scale = m_g * _exp2i(e_b)
+        elif algo == "e8m0":
+            scale = _exp2i(e_b)
+        else:  # fp32_amax
+            scale = s_b
+        xs = jnp.clip(x * scale, -q_amax, q_amax)
+        xq = xs.astype(out_dtype).astype(jnp.float32) / scale
+        # Eq. 3 compares errors of the *stored* (Fig. 4: BF16) values.
+        xq_stored = xq.astype(x_ref.dtype)
+        xqf = xq_stored.astype(jnp.float32)
+        rel = jnp.where(nz, jnp.abs((x - xqf) / jnp.where(nz, x, 1.0)), 0.0)
+        return xq_stored, jnp.sum(rel)
+
+    q4, e4 = candidate(q_amax4, mg_ref[0, 0], dt4)
+    q5, e5 = candidate(q_amax5, mg_ref[0, 1], dt5)
+
+    m1 = e4 < e5  # Eq. 3: E4M3 beats the E5M2 benchmark on total rel-err.
+    if mode == "sub2":
+        use5 = jnp.bool_(False)
+    else:  # sub3: Eq. 4 dynamic-range gate for the E5M2 fallback.
+        anynz = cnt > 0
+        bmin = jnp.min(jnp.where(nz, ax, _F32_BIG))
+        ratio = jnp.where(anynz, bmax / jnp.where(anynz, bmin, 1.0), 1.0)
+        use5 = jnp.logical_and(jnp.logical_not(m1), ratio < range_ratio)
+
+    y_ref[...] = jnp.where(m1, q4, jnp.where(use5, q5, x_ref[...]))
+    # The (nm, nk) stat outputs live whole in SMEM across the grid (TPU
+    # tiling forbids (1, 1) VMEM blocks and VMEM rejects scalar stores);
+    # each step writes its own cell.
+    sel_ref[i, j] = jnp.where(
+        m1, jnp.int32(0), jnp.where(use5, jnp.int32(1), jnp.int32(2))
+    )
+    e4_ref[i, j] = e4
+    e5_ref[i, j] = e5
+    cnt_ref[i, j] = cnt
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block", "q_amax4", "q_amax5", "dt4", "dt5", "mode", "algo",
+        "range_ratio", "interpret",
+    ),
+)
+def mor_select_blocks(
+    x: jnp.ndarray,
+    group_mantissas: jnp.ndarray,
+    *,
+    block: Tuple[int, int] = (128, 128),
+    q_amax4: float = 448.0,
+    q_amax5: float = 57344.0,
+    dt4=jnp.float8_e4m3fn,
+    dt5=jnp.float8_e5m2,
+    mode: str = "sub3",
+    algo: str = "gam",
+    range_ratio: float = 57344.0 / 2.0**-14,
+    interpret: bool = False,
+):
+    """x: (M, K) with M % bm == 0, K % bk == 0.
+
+    group_mantissas: (2,) f32 -- [m_g(E4M3), m_g(E5M2)] (both 1.0 for the
+    e8m0 / fp32_amax ablations).
+
+    Returns (y selected fake-quant in x.dtype, sel (nm, nk) i32,
+    e4_err_sums (nm, nk) f32, e5_err_sums (nm, nk) f32,
+    counts (nm, nk) f32).
+    """
+    M, K = x.shape
+    bm, bk = block
+    assert M % bm == 0 and K % bk == 0, (x.shape, block)
+    assert mode in ("sub2", "sub3"), mode
+    nm, nk = M // bm, K // bk
+    mg = jnp.reshape(group_mantissas.astype(jnp.float32), (1, 2))
+
+    kernel = functools.partial(
+        _kernel, q_amax4=q_amax4, q_amax5=q_amax5, dt4=dt4, dt5=dt5,
+        mode=mode, algo=algo, range_ratio=range_ratio,
+    )
+    out_shapes = (
+        jax.ShapeDtypeStruct((M, K), x.dtype),
+        jax.ShapeDtypeStruct((nm, nk), jnp.int32),
+        jax.ShapeDtypeStruct((nm, nk), jnp.float32),
+        jax.ShapeDtypeStruct((nm, nk), jnp.float32),
+        jax.ShapeDtypeStruct((nm, nk), jnp.float32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nm, nk),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),  # group mantissas
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),  # x block (VMEM)
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(mg, x)

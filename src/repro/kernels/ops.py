@@ -3,6 +3,13 @@
 backend='auto' uses the Pallas kernels on TPU and interpret mode under
 REPRO_KERNEL_INTERPRET=1 (CI/CPU validation); otherwise falls back to the
 pure-jnp reference path so the library works everywhere.
+
+This module is the single quantization entry point for the MoR recipes:
+``repro.core.mor`` routes every quantization event through
+:func:`quant_err` (tensor-level / static recipes) and :func:`mor_select`
+(sub-tensor recipes), so the Pallas kernels and the XLA lowering can
+never drift apart (the refs in :mod:`repro.kernels.ref` ARE the XLA
+path). See ``src/repro/kernels/README.md`` for the dispatch matrix.
 """
 from __future__ import annotations
 
@@ -12,26 +19,148 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import E4M3, FormatSpec
+from repro.core.formats import E4M3, E5M2, FormatSpec
 from repro.core.gam import split_mantissa_exponent
-from repro.core.partition import Partition
+from repro.core.metrics import E5M2_RANGE_RATIO
+from repro.core.partition import Partition, _pad2d
 
 from . import ref as _ref
 from .flash_attention import flash_attention_fwd
 from .fp8_gemm import fp8_gemm as _fp8_gemm_kernel
 from .gam_quant import gam_quant_blocks
+from .mor_select import mor_select_blocks
+from .ref import MorSelect, QuantErr
 
-__all__ = ["gam_quant", "fp8_gemm", "flash_attention", "resolve_backend"]
+__all__ = [
+    "gam_quant",
+    "quant_err",
+    "mor_select",
+    "fp8_gemm",
+    "flash_attention",
+    "resolve_backend",
+    "QuantErr",
+    "MorSelect",
+]
 
 
 def resolve_backend(backend: str = "auto") -> str:
     if backend != "auto":
+        if backend not in ("pallas", "interpret", "xla"):
+            raise ValueError(
+                f"unknown backend: {backend!r} "
+                "(want 'auto', 'pallas', 'interpret', or 'xla')"
+            )
         return backend
     if os.environ.get("REPRO_KERNEL_INTERPRET") == "1":
         return "interpret"
     if any(d.platform == "tpu" for d in jax.devices()):
         return "pallas"
     return "xla"
+
+
+def _kernel_backend(backend: str, part: Partition) -> str:
+    """Backend for a recipe-level event, demoting kernel-hostile layouts.
+
+    The fused kernels tile the operand as (bm, bk) VMEM blocks; 'channel'
+    and 'subchannel' partitions resolve to (1, k) rows, which defeats the
+    (8, 128) VPU tiling, and 'tensor' resolves to one whole-operand block
+    that can overflow the ~16 MB of VMEM per core -- those events always
+    take the XLA lowering.
+    """
+    be = resolve_backend(backend)
+    if be != "xla" and part.kind in ("tensor", "channel", "subchannel"):
+        return "xla"
+    return be
+
+
+def _group_amax(x: jnp.ndarray):
+    """(g_amax, zero-guarded g_amax): one global XLA reduce."""
+    g_amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return g_amax, jnp.where(g_amax > 0, g_amax, 1.0)
+
+
+def _group_mantissa(safe_g: jnp.ndarray, fmt: FormatSpec, algo: str):
+    """The Alg. 1 shared mantissa m_g (1.0 for the ablation algos)."""
+    if algo != "gam":
+        return jnp.float32(1.0)
+    m_g, _ = split_mantissa_exponent(fmt.amax / safe_g)
+    return m_g
+
+
+def quant_err(
+    x: jnp.ndarray,
+    part: Partition,
+    fmt: FormatSpec = E4M3,
+    algo: str = "gam",
+    *,
+    backend: str = "auto",
+) -> QuantErr:
+    """Fused quantize + per-block error sums of a 2-D operand.
+
+    Backend-dispatched core of the 'tensor' and 'e4m3' recipes. Handles
+    block-non-divisible shapes by zero-padding (zeros quantize exactly
+    and are excluded from the error sums/counts by construction).
+    """
+    be = _kernel_backend(backend, part)
+    if be == "xla":
+        return _ref.quant_err_ref(x, part, fmt, algo)
+    M, K = x.shape
+    bm, bk = part.resolve(x.shape)
+    xp = _pad2d(x, bm, bk)
+    g_amax, safe_g = _group_amax(x)
+    m_g = _group_mantissa(safe_g, fmt, algo)
+    xq, _, err_sums, counts = gam_quant_blocks(
+        xp, m_g,
+        block=(bm, bk), q_amax=fmt.amax, fmt_dtype=fmt.dtype, algo=algo,
+        interpret=(be == "interpret"),
+    )
+    return QuantErr(
+        y=xq[:M, :K],
+        err_sums=err_sums,
+        counts=counts,
+        group_amax=g_amax,
+        group_mantissa=m_g,
+    )
+
+
+def mor_select(
+    x: jnp.ndarray,
+    part: Partition,
+    mode: str = "sub3",
+    algo: str = "gam",
+    *,
+    backend: str = "auto",
+) -> MorSelect:
+    """Fused sub-tensor MoR selection (§3.2) of a 2-D operand.
+
+    One pass per block: both fp8 candidates, Eq. 3 error comparison,
+    Eq. 4 range gate (sub3), and the per-block select -- versus the three
+    full operand passes of the naive lowering.
+    """
+    be = _kernel_backend(backend, part)
+    if be == "xla":
+        return _ref.mor_select_ref(x, part, mode, algo)
+    M, K = x.shape
+    bm, bk = part.resolve(x.shape)
+    xp = _pad2d(x, bm, bk)
+    g_amax, safe_g = _group_amax(x)
+    mg4 = _group_mantissa(safe_g, E4M3, algo)
+    mg5 = _group_mantissa(safe_g, E5M2, algo)
+    y, sel, e4_sums, e5_sums, counts = mor_select_blocks(
+        xp, jnp.stack([mg4, mg5]),
+        block=(bm, bk), q_amax4=E4M3.amax, q_amax5=E5M2.amax,
+        dt4=E4M3.dtype, dt5=E5M2.dtype, mode=mode, algo=algo,
+        range_ratio=E5M2_RANGE_RATIO, interpret=(be == "interpret"),
+    )
+    return MorSelect(
+        y=y[:M, :K],
+        sel=sel,
+        e4_sums=e4_sums,
+        e5_sums=e5_sums,
+        counts=counts,
+        group_amax=g_amax,
+        group_mantissa=mg4,
+    )
 
 
 def gam_quant(
@@ -51,11 +180,8 @@ def gam_quant(
     part = Partition("block", block)
     if be == "xla":
         return _ref.gam_quant_ref(x, part, fmt, algo)
-    g_amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
-    safe_g = jnp.where(g_amax > 0, g_amax, 1.0)
-    m_g, _ = split_mantissa_exponent(fmt.amax / safe_g)
-    if algo != "gam":
-        m_g = jnp.float32(1.0)
+    _, safe_g = _group_amax(x)
+    m_g = _group_mantissa(safe_g, fmt, algo)
     return gam_quant_blocks(
         x, m_g,
         block=block, q_amax=fmt.amax, fmt_dtype=fmt.dtype, algo=algo,

@@ -1,17 +1,154 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are also the ``backend='xla'`` lowerings of the public entry points
+in :mod:`repro.kernels.ops`, so they are written to be *bit-identical* to
+the pre-kernel XLA paths of :mod:`repro.core.mor` (the recipe regression
+tests assert this). This module must not import ``repro.core.mor`` --
+``core.mor`` dispatches through ``kernels.ops`` which imports this
+module, and a back-edge would close an import cycle.
+"""
 from __future__ import annotations
 
-from typing import Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import FormatSpec
-from repro.core.gam import compute_scales
-from repro.core.mor import quant_dequant_with_scales
-from repro.core.partition import Partition, to_blocks
+from repro.core.formats import E4M3, E5M2, FormatSpec, cast_to_format
+from repro.core.gam import compute_scales, scales_from_bmax
+from repro.core.metrics import E5M2_RANGE_RATIO
+from repro.core.partition import Partition, from_blocks, to_blocks
 
-__all__ = ["gam_quant_ref", "fp8_gemm_ref", "flash_attention_ref"]
+__all__ = [
+    "QuantErr",
+    "MorSelect",
+    "gam_quant_ref",
+    "quant_err_ref",
+    "mor_select_ref",
+    "fp8_gemm_ref",
+    "flash_attention_ref",
+]
+
+
+class QuantErr(NamedTuple):
+    """One fused quantize+error event (backend-independent result).
+
+    y:              (M, K) fake-quantized operand in the input dtype.
+    err_sums:       (nm, nk) f32 per-block relative-error sums (Eq. 1-3).
+    counts:         (nm, nk) f32 per-block non-zero element counts.
+    group_amax:     () f32 amax of the whole group (tensor).
+    group_mantissa: () f32 GAM shared mantissa m_g (1.0 for ablations).
+    """
+
+    y: jnp.ndarray
+    err_sums: jnp.ndarray
+    counts: jnp.ndarray
+    group_amax: jnp.ndarray
+    group_mantissa: jnp.ndarray
+
+
+class MorSelect(NamedTuple):
+    """One fused sub-tensor selection event (paper §3.2).
+
+    y:          (M, K) per-block selected output in the input dtype.
+    sel:        (nm, nk) i32 selection id: 0=E4M3, 1=E5M2, 2=BF16.
+    e4_sums:    (nm, nk) f32 E4M3 per-block relative-error sums.
+    e5_sums:    (nm, nk) f32 E5M2 per-block relative-error sums.
+    counts:     (nm, nk) f32 per-block non-zero element counts.
+    group_amax / group_mantissa: as in :class:`QuantErr` (E4M3's m_g).
+    """
+
+    y: jnp.ndarray
+    sel: jnp.ndarray
+    e4_sums: jnp.ndarray
+    e5_sums: jnp.ndarray
+    counts: jnp.ndarray
+    group_amax: jnp.ndarray
+    group_mantissa: jnp.ndarray
+
+
+def _blocked_quant_err(xb: jnp.ndarray, fmt: FormatSpec, algo: str):
+    """Single-pass quantize + per-block error sums on a blocked view.
+
+    xb: (nm, nk, bm, bk) in its *original* dtype (bf16 in training -- the
+    paper's Fig. 4 pipeline is BF16-in/BF16-out, so large intermediates
+    never materialize in f32; per-block scale math runs in f32 on the tiny
+    (nm, nk) arrays). Returns (xqb in xb.dtype, scales, err_sums f32,
+    counts f32). This is the XLA analogue of the fused Pallas kernels.
+    """
+    bmax = jnp.max(jnp.abs(xb), axis=(2, 3)).astype(jnp.float32)
+    scales = scales_from_bmax(bmax, fmt, algo)
+    s = scales.scale[:, :, None, None]
+    xqb_f32 = cast_to_format(xb.astype(jnp.float32) * s, fmt) / s
+    xqb = xqb_f32.astype(xb.dtype)  # Fig. 4: output stays BF16
+    xf = xb.astype(jnp.float32)
+    nz = xf != 0.0
+    err = jnp.where(
+        nz,
+        jnp.abs((xf - xqb.astype(jnp.float32)) / jnp.where(nz, xf, 1.0)),
+        0.0,
+    )
+    return (
+        xqb,
+        scales,
+        jnp.sum(err, (2, 3)),
+        jnp.sum(nz, (2, 3)).astype(jnp.float32),
+    )
+
+
+def quant_err_ref(
+    x: jnp.ndarray, part: Partition, fmt: FormatSpec, algo: str = "gam"
+) -> QuantErr:
+    """Reference for the ops.quant_err entry point (one-format events)."""
+    xb = to_blocks(x, part)
+    xqb, scales, err_sums, counts = _blocked_quant_err(xb, fmt, algo)
+    return QuantErr(
+        y=from_blocks(xqb, x.shape),
+        err_sums=err_sums,
+        counts=counts,
+        group_amax=scales.group_amax,
+        group_mantissa=scales.group_mantissa,
+    )
+
+
+def mor_select_ref(
+    x: jnp.ndarray, part: Partition, mode: str = "sub3", algo: str = "gam"
+) -> MorSelect:
+    """Reference for mor_select_blocks: fused §3.2 per-block selection."""
+    assert mode in ("sub2", "sub3"), mode
+    xb = to_blocks(x, part)
+    q4b, scales4, e4_sums, counts = _blocked_quant_err(xb, E4M3, algo)
+    q5b, _, e5_sums, _ = _blocked_quant_err(xb, E5M2, algo)
+
+    m1 = e4_sums < e5_sums  # Eq. 3
+    if mode == "sub2":
+        use5 = jnp.zeros_like(m1)
+    else:
+        # Eq. 4 dynamic-range gate on the nonzero magnitudes.
+        xabs = jnp.abs(xb)
+        anynz = counts > 0
+        bmax = jnp.max(xabs, axis=(2, 3)).astype(jnp.float32)
+        big = jnp.asarray(jnp.finfo(xb.dtype).max, xb.dtype)
+        bmin = jnp.min(jnp.where(xb != 0, xabs, big), axis=(2, 3)).astype(
+            jnp.float32
+        )
+        ratio = jnp.where(anynz, bmax / jnp.where(anynz, bmin, 1.0), 1.0)
+        use5 = jnp.logical_and(jnp.logical_not(m1), ratio < E5M2_RANGE_RATIO)
+
+    m1b = m1[:, :, None, None]
+    yb = jnp.where(m1b, q4b, jnp.where(use5[:, :, None, None], q5b, xb))
+    sel = jnp.where(
+        m1, jnp.int32(0), jnp.where(use5, jnp.int32(1), jnp.int32(2))
+    )
+    return MorSelect(
+        y=from_blocks(yb, x.shape),
+        sel=sel,
+        e4_sums=e4_sums,
+        e5_sums=e5_sums,
+        counts=counts,
+        group_amax=scales4.group_amax,
+        group_mantissa=scales4.group_mantissa,
+    )
 
 
 def gam_quant_ref(
@@ -22,8 +159,10 @@ def gam_quant_ref(
 ):
     """Reference for gam_quant_blocks: (xq, block_exp, err_sums, counts)."""
     scales = compute_scales(x, part, fmt, algo=algo)
-    xq = quant_dequant_with_scales(x, part, fmt, scales).astype(x.dtype)
     xb = to_blocks(x.astype(jnp.float32), part)
+    s = scales.scale[:, :, None, None]
+    xqb = cast_to_format(xb * s, fmt) / s
+    xq = from_blocks(xqb, x.shape).astype(x.dtype)
     xqb = to_blocks(xq.astype(jnp.float32), part)
     nz = xb != 0
     err = jnp.where(nz, jnp.abs((xb - xqb) / jnp.where(nz, xb, 1.0)), 0.0)

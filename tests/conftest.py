@@ -1,0 +1,62 @@
+"""Shared test substrate.
+
+* Defaults REPRO_KERNEL_INTERPRET=1 (before any repro import) so
+  backend='auto' resolves to Pallas interpret mode on CPU -- every test
+  run exercises the real kernel bodies, not just the XLA references.
+  Export REPRO_KERNEL_INTERPRET=0 to force the XLA lowering instead.
+* Registers the ``slow`` marker; slow tests are skipped unless --runslow
+  is passed, keeping tier-1 (`pytest -x -q`) to a few minutes.
+* Provides fixed-seed PRNG helpers so tests are reproducible by default.
+"""
+import os
+
+os.environ.setdefault("REPRO_KERNEL_INTERPRET", "1")
+
+import numpy as np
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked @pytest.mark.slow",
+    )
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test, skipped unless --runslow"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow test: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
+@pytest.fixture
+def rng():
+    """Fixed-seed numpy Generator (seed 0)."""
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def make_rng():
+    """Factory for seeded numpy Generators: make_rng(seed)."""
+    return np.random.default_rng
+
+
+@pytest.fixture
+def rand():
+    """rand(shape, seed=0, scale=1.0, dtype=f32) -> deterministic jnp array."""
+    import jax.numpy as jnp
+
+    def _rand(shape, seed=0, scale=1.0, dtype=jnp.float32):
+        r = np.random.default_rng(seed)
+        return jnp.asarray(r.standard_normal(shape) * scale, dtype)
+
+    return _rand

@@ -1,7 +1,11 @@
 """Unit + property tests for GAM scaling (Algorithm 1)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'hypothesis' test extra"
+)
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np

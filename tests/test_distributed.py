@@ -158,18 +158,21 @@ def test_fp8_compressed_pod_psum():
         def f(gs):
             return psum_fp8(gs[0])
 
-        out = jax.jit(jax.shard_map(
-            f, mesh=mesh, in_specs=P('pod'), out_specs=P(),
-            check_vma=False))(g)
+        if hasattr(jax, 'shard_map'):
+            sm = jax.shard_map(f, mesh=mesh, in_specs=P('pod'),
+                               out_specs=P(), check_vma=False)
+        else:  # older jax: experimental API, check_rep kwarg
+            from jax.experimental.shard_map import shard_map
+            sm = shard_map(f, mesh=mesh, in_specs=P('pod'),
+                           out_specs=P(), check_rep=False)
+
+        out = jax.jit(sm)(g)
         ref = jnp.sum(g, axis=0)
         rel = np.abs(np.asarray(out) - np.asarray(ref)) / (
             np.abs(np.asarray(ref)) + 1e-3)
         assert np.median(rel) < 0.05, np.median(rel)
         # The compressed collective moves f8 payloads: check in HLO.
-        hlo = jax.jit(jax.shard_map(
-            f, mesh=mesh, in_specs=P('pod'), out_specs=P(),
-            check_vma=False
-        )).lower(g).compile().as_text()
+        hlo = jax.jit(sm).lower(g).compile().as_text()
         assert 'f8e4m3' in hlo and 'all-gather' in hlo
         print('COMPRESS OK', float(np.median(rel)))
     """))

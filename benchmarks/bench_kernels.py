@@ -1,8 +1,13 @@
 """Kernel microbenchmarks: wall time per call on this host (CPU: the jnp
 reference / interpret paths; on a TPU host the same harness times the
-Pallas kernels) + derived bandwidth."""
+Pallas kernels) + derived bandwidth.
+
+``--smoke`` runs a reduced matrix (CI lane); ``--json PATH`` writes the
+rows as a machine-readable artifact.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -13,9 +18,11 @@ from repro.core import E4M3, E5M2, PER_BLOCK_128, MoRPolicy, mor_quantize
 from repro.core.formats import cast_to_format
 from repro.core.gam import scales_from_bmax
 from repro.core.metrics import E5M2_RANGE_RATIO
+from repro.core.mor import quantize_for_gemm
 from repro.core.partition import Partition, from_blocks, to_blocks
 from repro.kernels import ref as kref
-from repro.kernels.ops import gam_quant, mor_select
+from repro.kernels.ops import gam_quant, mixed_gemm, mor_select
+from repro.kernels.ref import passthrough_mixed
 from repro.launch.hlo_analysis import analyze_hlo
 
 from .common import csv_row
@@ -102,12 +109,93 @@ def _three_pass_sub3(x2d):
     return y
 
 
-def main():
+def _legacy_dequant_matmul(x2d, mo):
+    """The pre-mixed-GEMM serving lowering, frozen as the baseline: fully
+    materialize the dequantized bf16 weight, then a dense bf16 matmul.
+    The per-block representation decisions are erased before the dot."""
+    w = mo.dequant()
+    return jnp.dot(
+        x2d, w.T.astype(x2d.dtype), preferred_element_type=jnp.float32
+    ).astype(x2d.dtype)
+
+
+def _bench_mixed_gemm(rows, rng, smoke: bool):
+    """Mixed-representation GEMM vs legacy dequantize-then-matmul:
+    wall time + HLO bytes + operand-pass counts (xla lowerings) and
+    fused-kernel launch counts (TPU cross-lowering)."""
+    sizes = ((512, 512, 512),) if smoke else (
+        (512, 512, 512), (1024, 1024, 1024)
+    )
+    pol = MoRPolicy(recipe="sub3", partition="block", backend="xla")
+    for M, N, K in sizes:
+        x = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
+        w = jnp.asarray(rng.standard_normal((N, K)), jnp.bfloat16)
+        mo, _ = quantize_for_gemm(w, pol)
+        bk = mo.block[1]
+
+        def legacy(a, m=mo):
+            return _legacy_dequant_matmul(a, m)
+
+        def fused_xla(a, m=mo, bk=bk):
+            return mixed_gemm(
+                passthrough_mixed(a, (bk, bk)), m, backend="xla"
+            )
+
+        def fused_pallas(a, m=mo, bk=bk):
+            return mixed_gemm(
+                passthrough_mixed(a, (bk, bk)), m, backend="pallas"
+            )
+
+        iters = 3 if smoke else 10
+        us_l = _time(jax.jit(legacy), x, iters=iters)
+        us_f = _time(jax.jit(fused_xla), x, iters=iters)
+        by_l, ps_l = _hlo_stats(legacy, x)
+        by_f, ps_f = _hlo_stats(fused_xla, x)
+        try:
+            launches = _tpu_kernel_launches(fused_pallas, x)
+        except Exception:  # older jax without cross-platform lowering
+            launches = -1
+        tag = f"{M}x{N}x{K}"
+        rows.append(
+            csv_row(f"kernel/gemm_legacy_dequant_{tag}", us_l,
+                    f"hbm_bytes={by_l:.0f};operand_passes={ps_l}")
+        )
+        rows.append(
+            csv_row(f"kernel/gemm_mixed_xla_{tag}", us_f,
+                    f"hbm_bytes={by_f:.0f};operand_passes={ps_f};"
+                    f"bytes_vs_legacy={by_f / max(by_l, 1):.2f}x")
+        )
+        rows.append(
+            csv_row(f"kernel/gemm_mixed_pallas_{tag}", 0.0,
+                    f"tpu_kernel_launches={launches};"
+                    f"legacy_operand_passes={ps_l}")
+        )
+
+    # Interpret-mode run of the real kernel body (small, CPU-feasible).
+    x = jnp.asarray(rng.standard_normal((256, 256)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((256, 256)), jnp.bfloat16)
+    mo, _ = quantize_for_gemm(w, pol)
+    us = _time(
+        lambda a: mixed_gemm(
+            passthrough_mixed(a, (128, 128)), mo, backend="interpret"
+        ),
+        x, iters=3,
+    )
+    rows.append(
+        csv_row("kernel/gemm_mixed_interp_256", us, "mode=interpret")
+    )
+
+
+def main(smoke: bool = False):
     rows = []
     rng = np.random.default_rng(0)
 
+    # Mixed-representation block GEMM vs legacy dequant+matmul.
+    _bench_mixed_gemm(rows, rng, smoke)
+
     # Fused mor_quantize (the XLA lowering used in train steps).
-    for mkn in ((1024, 1024), (4096, 1024)):
+    quant_sizes = ((1024, 1024),) if smoke else ((1024, 1024), (4096, 1024))
+    for mkn in quant_sizes:
         x = jnp.asarray(rng.standard_normal(mkn), jnp.bfloat16)
         pol = MoRPolicy(recipe="tensor", partition="block")
         f = jax.jit(lambda a: mor_quantize(a, pol)[0])
@@ -120,7 +208,7 @@ def main():
 
     # Fused sub-tensor select vs the pre-refactor 3-pass lowering.
     part = PER_BLOCK_128
-    for mkn in ((1024, 1024), (4096, 1024)):
+    for mkn in quant_sizes:
         x = jnp.asarray(rng.standard_normal(mkn), jnp.bfloat16)
 
         def fused_xla(a):
@@ -190,5 +278,22 @@ def main():
 
 
 if __name__ == "__main__":
-    for row in main()[0]:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced matrix for the CI bench lane")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args()
+    out_rows = main(smoke=args.smoke)[0]
+    for row in out_rows:
         print(row)
+    if args.json:
+        recs = []
+        for row in out_rows:
+            name, us, derived = row.split(",", 2)
+            recs.append({"name": name, "us": float(us), "derived": derived})
+        with open(args.json, "w") as f:
+            json.dump(recs, f, indent=2)
+        print(f"wrote {len(recs)} rows to {args.json}")

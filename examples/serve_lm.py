@@ -13,7 +13,7 @@ import numpy as np
 from repro.configs import get_config, reduced
 from repro.core import MoRPolicy, TENSOR_MOR
 from repro.models import init_params
-from repro.serve import Engine, Request, ServeConfig, quantize_params
+from repro.serve import Engine, Request, ServeConfig
 
 
 def main():
@@ -26,22 +26,26 @@ def main():
 
     cfg = dataclasses.replace(reduced(get_config(args.arch)), vocab=512)
     params = init_params(cfg, jax.random.PRNGKey(0))
-
-    # Ahead-of-time MoR decision -> real FP8 storage for accepted weights.
-    qparams, qstats = quantize_params(
-        params, MoRPolicy(recipe="tensor"), min_size=1024
-    )
-    n_q = sum(s["quantized"] for s in qstats.values())
-    print(f"weights quantized to FP8 storage: {int(n_q)}/{len(qstats)} "
-          f"({100 * n_q / max(len(qstats), 1):.1f}%)")
     bytes_bf16 = sum(
         l.size * 2 for l in jax.tree.leaves(params) if hasattr(l, "size")
     )
-    print(f"weight bytes bf16={bytes_bf16/1e6:.2f}MB -> "
-          f"fp8-mixed~{bytes_bf16 * (1 - 0.5 * n_q / max(len(qstats),1))/1e6:.2f}MB")
 
+    # Ahead-of-time per-block MoR decision -> sub-tensor QTensor storage;
+    # every matmul against a quantized weight runs through the
+    # mixed-representation block GEMM kernel.
     eng = Engine(cfg, TENSOR_MOR, params,
-                 ServeConfig(slots=args.slots, max_seq=128))
+                 ServeConfig(slots=args.slots, max_seq=128),
+                 quantize=MoRPolicy(recipe="sub3"), quantize_min_size=1024)
+    qstats = eng.qstats or {}
+    n_q = sum(s["quantized"] for s in qstats.values())
+    print(f"weights quantized to mixed fp8 storage: {int(n_q)}/{len(qstats)} "
+          f"({100 * n_q / max(len(qstats), 1):.1f}%)")
+    bytes_mixed = sum(
+        l.size * l.dtype.itemsize for l in jax.tree.leaves(eng.params)
+        if hasattr(l, "size")
+    )
+    print(f"param bytes bf16={bytes_bf16/1e6:.2f}MB -> "
+          f"mixed={bytes_mixed/1e6:.2f}MB (actual stored bytes)")
     rng = np.random.default_rng(0)
     reqs = [
         Request(i, rng.integers(0, cfg.vocab, 8).astype(np.int32),

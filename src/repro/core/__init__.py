@@ -7,7 +7,13 @@ from .metrics import (
     block_relative_error_sums,
     relative_error,
 )
-from .mor import STATS_WIDTH, mor_quantize, partition_of, quant_dequant
+from .mor import (
+    STATS_WIDTH,
+    mor_quantize,
+    partition_of,
+    quant_dequant,
+    quantize_for_gemm,
+)
 from .partition import (
     PER_BLOCK_64,
     PER_BLOCK_128,
@@ -34,6 +40,7 @@ __all__ = [
     "N_BWD_EVENTS", "N_FWD_EVENTS", "mor_dot", "new_token",
     "block_dynamic_range_ok", "block_relative_error_sums", "relative_error",
     "STATS_WIDTH", "mor_quantize", "partition_of", "quant_dequant",
+    "quantize_for_gemm",
     "PER_BLOCK_64", "PER_BLOCK_128", "PER_CHANNEL", "PER_TENSOR",
     "SUB_CHANNEL_128", "Partition", "block_amax",
     "BF16_BASELINE", "SUBTENSOR2_MOR", "SUBTENSOR3_MOR", "TENSOR_MOR",

@@ -18,6 +18,24 @@ functional channel that stacks naturally under ``lax.scan`` over layers.
 
 mor_dot returns f32-accumulated results cast back to the input dtype
 (bf16 in training), matching mixed-precision GEMM semantics.
+
+GEMM lowerings (``MoRDotPolicy.fuse_gemm``):
+
+  * fake-quant (default): each event dequantizes back to BF16 and the
+    three GEMMs are plain bf16 ``jnp.dot`` -- the per-block E4M3/E5M2
+    decisions never reach the matmul.
+  * fused: each event packs real uint8 fp8 payloads + per-block
+    tags/scales (``core.mor.quantize_for_gemm``) and all three GEMMs run
+    through the mixed-representation block kernel
+    (``repro.kernels.mixed_gemm``) -- per-block representations are
+    decoded in-register inside the matmul. Same decisions, same stats
+    rows (one shared decision path), outputs within f32-accumulation
+    ordering tolerance.
+
+Serving: a weight that is already real-quantized (``serve.quantized
+.QTensor``; anything exposing ``as_mixed_operand()``) is consumed
+directly by the mixed kernel against a BF16-passthrough activation
+pack -- no dequantize-materialize step, no grad support.
 """
 from __future__ import annotations
 
@@ -27,8 +45,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from .mor import STATS_WIDTH, mor_quantize
+from .mor import STATS_WIDTH, mor_quantize, quantize_for_gemm
 from .policy import MoRDotPolicy
+
+# Loaded after .mor so the core -> kernels import chain is already
+# resolved (see the import note in core/mor.py).
+from repro.kernels import ops as kops
 
 __all__ = [
     "N_FWD_EVENTS",
@@ -51,6 +73,11 @@ def _flat2d(x: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
     return x.reshape(-1, x.shape[-1]), lead
 
 
+def _is_mixed_weight(w) -> bool:
+    """Real-quantized serving weight (QTensor or compatible)."""
+    return hasattr(w, "as_mixed_operand")
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def mor_dot(x, w, token, policy: MoRDotPolicy):
     """y = MoR(x) @ MoR(w).  x: (..., K), w: (K, N), token: new_token().
@@ -68,22 +95,70 @@ def _plain_dot(x, w):
     ).astype(x.dtype)
 
 
+def _check_fusable(policy: MoRDotPolicy):
+    """The mixed GEMM tiles all three dots with one block grid: every
+    enabled operand policy must be 'block'-partitioned with one shared
+    block shape (so the contraction blocks of both operands of each
+    GEMM, and of the transposed wgrad views, line up)."""
+    ps = [("act", policy.act), ("weight", policy.weight)]
+    if policy.quantize_bwd:
+        ps.append(("grad", policy.grad))
+    shapes = set()
+    for name, p in ps:
+        # Disabled events still pack (as BF16 passthrough) on this
+        # policy's block grid, so its block_shape must agree too.
+        shapes.add(tuple(p.block_shape))
+        if p.enabled and p.partition != "block":
+            raise ValueError(
+                f"fuse_gemm=True needs partition='block' for the {name} "
+                f"policy (got {p.partition!r})"
+            )
+    if len(shapes) > 1:
+        raise ValueError(
+            f"fuse_gemm=True needs one shared block_shape, got {shapes}"
+        )
+
+
+def _serve_fwd(x, w, policy: MoRDotPolicy):
+    """Forward against a real-quantized (mixed-layout) serving weight."""
+    mo = w.as_mixed_operand()  # (N, K) quantization view
+    x2, lead = _flat2d(x)
+    y = kops.mixed_dot(
+        x2, mo, out_dtype=x.dtype, backend=policy.weight.backend
+    ).reshape(*lead, w.shape[1])
+    fwd_stats = jnp.zeros((N_FWD_EVENTS, STATS_WIDTH), jnp.float32)
+    return (y, fwd_stats), (x, w)
+
+
 def _fwd(x, w, token, policy: MoRDotPolicy):
     del token
+    if _is_mixed_weight(w):
+        return _serve_fwd(x, w, policy)
     if not policy.enabled:
         y = _plain_dot(x, w)
         fwd_stats = jnp.zeros((N_FWD_EVENTS, STATS_WIDTH), jnp.float32)
         return (y, fwd_stats), (x, w)
 
     x2, lead = _flat2d(x)
-    # Activation event: (M, K), contraction last.
-    xq, x_stats = mor_quantize(x2, policy.act)
-    # Weight event for the fwd GEMM: w is (K, N), contraction first ->
-    # quantize the (N, K) transposed view so channels align with the dot dim.
-    wq_t, w_stats = mor_quantize(w.T, policy.weight)
-    y = jnp.dot(
-        xq, wq_t.T, preferred_element_type=jnp.float32
-    ).astype(x.dtype)
+    if policy.fuse_gemm:
+        _check_fusable(policy)
+        # Activation event (M, K) and weight event (N, K): both packed
+        # for real, contraction last; the kernel consumes the payloads.
+        a_mo, x_stats = quantize_for_gemm(x2, policy.act)
+        b_mo, w_stats = quantize_for_gemm(w.T, policy.weight)
+        y = kops.mixed_gemm(
+            a_mo, b_mo, out_dtype=x.dtype, backend=policy.act.backend
+        )
+    else:
+        # Activation event: (M, K), contraction last.
+        xq, x_stats = mor_quantize(x2, policy.act)
+        # Weight event for the fwd GEMM: w is (K, N), contraction first ->
+        # quantize the (N, K) transposed view so channels align with the
+        # dot dim.
+        wq_t, w_stats = mor_quantize(w.T, policy.weight)
+        y = jnp.dot(
+            xq, wq_t.T, preferred_element_type=jnp.float32
+        ).astype(x.dtype)
     y = y.reshape(*lead, w.shape[1])
     fwd_stats = jnp.stack([x_stats, w_stats])
     return (y, fwd_stats), (x, w)
@@ -104,8 +179,46 @@ def _transpose_invariant(p) -> bool:
     return False
 
 
+def _bwd_fused(policy: MoRDotPolicy, x2, dy2, lead, x, w):
+    """dgrad + wgrad through the mixed-representation kernel, mirroring
+    the fake-quant branch structure event for event (same stats rows)."""
+    be = policy.grad.backend
+    # dgrad GEMM: dx[m,k] = sum_n dy[m,n] * w[k,n] -- both views
+    # contraction-last already.
+    dy_mo, dy_stats = quantize_for_gemm(dy2, policy.grad)      # (M, N)
+    w_mo, w_stats = quantize_for_gemm(w, policy.weight)        # (K, N)
+    dx = kops.mixed_gemm(
+        dy_mo, w_mo, out_dtype=x.dtype, backend=be
+    ).reshape(*lead, x.shape[-1])
+
+    # wgrad GEMM: dw[k,n] = sum_m x[m,k] * dy[m,n].
+    if _transpose_invariant(policy.act) and _transpose_invariant(policy.grad):
+        # Q(x^T) == Q(x)^T bit-exactly: pack the (M, K) view and
+        # transpose the pack (tags/scales/payloads permute with the
+        # blocks), reusing the dy pack outright.
+        x_mo, xT_stats = quantize_for_gemm(x2, policy.act)
+        dw = kops.mixed_gemm(
+            x_mo.transpose(), dy_mo.transpose(),
+            out_dtype=w.dtype, backend=be,
+        )
+        dyT_stats = dy_stats
+    else:
+        xT_mo, xT_stats = quantize_for_gemm(x2.T, policy.act)    # (K, M)
+        dyT_mo, dyT_stats = quantize_for_gemm(dy2.T, policy.grad)  # (N, M)
+        dw = kops.mixed_gemm(
+            xT_mo, dyT_mo, out_dtype=w.dtype, backend=be
+        )
+    token_grad = jnp.stack([dy_stats, w_stats, xT_stats, dyT_stats])
+    return dx, dw, token_grad
+
+
 def _bwd(policy: MoRDotPolicy, res, cts):
     x, w = res
+    if _is_mixed_weight(w):
+        raise NotImplementedError(
+            "mor_dot cannot differentiate through a real-quantized "
+            "(QTensor) serving weight"
+        )
     dy, _dstats = cts
     dy2, _ = _flat2d(dy)
     x2, lead = _flat2d(x)
@@ -118,6 +231,10 @@ def _bwd(policy: MoRDotPolicy, res, cts):
             x2.T, dy2, preferred_element_type=jnp.float32
         ).astype(w.dtype)
         return dx, dw, jnp.zeros((N_BWD_EVENTS, STATS_WIDTH), jnp.float32)
+
+    if policy.fuse_gemm:
+        _check_fusable(policy)
+        return _bwd_fused(policy, x2, dy2, lead, x, w)
 
     # dgrad GEMM: dx[m,k] = sum_n dy[m,n] * w[k,n].
     dyq, dy_stats = mor_quantize(dy2, policy.grad)          # (M, N) contr. n

@@ -40,12 +40,15 @@ from .policy import MoRPolicy
 # import chain stays acyclic (kernels only touches formats/gam/metrics/
 # partition, all loaded above).
 from repro.kernels import ops as kops
+from repro.kernels import ref as _kref
+from repro.kernels.ref import TAG_BF16, TAG_E4M3, MixedOperand
 
 __all__ = [
     "STATS_WIDTH",
     "quant_dequant",
     "quant_dequant_with_scales",
     "mor_quantize",
+    "quantize_for_gemm",
     "partition_of",
 ]
 
@@ -113,7 +116,11 @@ def _tensor_level(x2d: jnp.ndarray, policy: MoRPolicy):
     stats = _stats(
         okf, err, q.group_amax, okf, 0.0, 1.0 - okf, nz, q.group_mantissa,
     )
-    return y, stats
+    tags = jnp.broadcast_to(
+        jnp.where(ok, TAG_E4M3, TAG_BF16).astype(jnp.int32),
+        q.err_sums.shape,
+    )
+    return y, stats, tags
 
 
 def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
@@ -140,14 +147,14 @@ def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
             f4, global_e4_err, r.group_amax, f4, 0.0, 1.0 - f4, nz,
             r.group_mantissa,
         )
-        return r.y, stats
+        return r.y, stats, r.sel
 
     f5 = jnp.sum((r.sel == 1).astype(jnp.float32)) / nblocks
     stats = _stats(
         f4, global_e4_err, r.group_amax, f4, f5, 1.0 - f4 - f5, nz,
         r.group_mantissa,
     )
-    return r.y, stats
+    return r.y, stats, r.sel
 
 
 def _static_e4m3(x2d: jnp.ndarray, policy: MoRPolicy):
@@ -160,7 +167,31 @@ def _static_e4m3(x2d: jnp.ndarray, policy: MoRPolicy):
     nz = jnp.sum(q.counts) / jnp.float32(x2d.size)
     stats = _stats(1.0, err, q.group_amax, 1.0, 0.0, 0.0, nz,
                    q.group_mantissa)
-    return q.y, stats
+    tags = jnp.full(q.err_sums.shape, TAG_E4M3, jnp.int32)
+    return q.y, stats, tags
+
+
+def _off_stats(x2d: jnp.ndarray) -> jnp.ndarray:
+    nz = jnp.mean((x2d != 0).astype(jnp.float32))
+    amax = jnp.max(jnp.abs(x2d.astype(jnp.float32)))
+    return _stats(0.0, 0.0, amax, 0.0, 0.0, 1.0, nz, 1.0)
+
+
+def _decide(x2d: jnp.ndarray, policy: MoRPolicy):
+    """Shared recipe dispatch: (fake-quant y, stats, per-block tags).
+
+    The single decision path behind both :func:`mor_quantize` (fake
+    quantization, training numerics) and :func:`quantize_for_gemm`
+    (real payload packing for the mixed GEMM) -- the two can therefore
+    never disagree on a block's representation or on the stats vector.
+    """
+    if policy.recipe == "tensor":
+        return _tensor_level(x2d, policy)
+    if policy.recipe in ("sub2", "sub3"):
+        return _sub_tensor(x2d, policy)
+    if policy.recipe == "e4m3":
+        return _static_e4m3(x2d, policy)
+    raise ValueError(f"unknown recipe: {policy.recipe}")
 
 
 def mor_quantize(
@@ -173,16 +204,48 @@ def mor_quantize(
     docstring. Contraction axis must be the last axis of ``x2d``.
     """
     if not policy.enabled:
-        nz = jnp.mean((x2d != 0).astype(jnp.float32))
-        amax = jnp.max(jnp.abs(x2d.astype(jnp.float32)))
-        return x2d, _stats(0.0, 0.0, amax, 0.0, 0.0, 1.0, nz, 1.0)
-
-    if policy.recipe == "tensor":
-        y, stats = _tensor_level(x2d, policy)
-    elif policy.recipe in ("sub2", "sub3"):
-        y, stats = _sub_tensor(x2d, policy)
-    elif policy.recipe == "e4m3":
-        y, stats = _static_e4m3(x2d, policy)
-    else:
-        raise ValueError(f"unknown recipe: {policy.recipe}")
+        return x2d, _off_stats(x2d)
+    y, stats, _ = _decide(x2d, policy)
     return y.astype(x2d.dtype), stats
+
+
+def quantize_for_gemm(
+    x2d: jnp.ndarray, policy: MoRPolicy
+) -> Tuple[MixedOperand, jnp.ndarray]:
+    """Real-quantize one 2-D operand view into the mixed block layout.
+
+    Same per-block decisions and stats vector as :func:`mor_quantize`
+    (one shared decision path), but instead of fake-quantized BF16
+    values it returns a :class:`~repro.kernels.ref.MixedOperand` --
+    uint8 fp8 payloads + original-precision buffer + per-block tags and
+    GAM scales -- ready for :func:`repro.kernels.ops.mixed_gemm`.
+    Decoding the pack reproduces the fake-quantization output
+    bit-for-bit (``tests/test_mixed_gemm.py``).
+
+    Only 'block' partitioning maps onto the GEMM tiling; other
+    partition kinds must keep the fake-quantization path.
+
+    Perf note: packing currently re-derives block scales and fp8 bits in
+    XLA after the selection pass (the selection kernel computed both
+    candidates in-register but only writes the winner + stats).
+    Emitting payloads directly from the selection kernel is the local
+    follow-up that removes this extra pass (kernels/README.md).
+    """
+    if not policy.enabled:
+        part = Partition("block", policy.block_shape)
+        return (
+            _kref.passthrough_mixed(x2d, part.resolve(x2d.shape)),
+            _off_stats(x2d),
+        )
+    if policy.partition != "block":
+        raise ValueError(
+            "quantize_for_gemm requires partition='block' (got "
+            f"{policy.partition!r}); channel/subchannel/tensor scales "
+            "do not tile a block GEMM -- use the fake-quant path"
+        )
+    part = partition_of(policy)
+    _, stats, tags = _decide(x2d, policy)
+    mo = _kref.pack_mixed(
+        x2d, tags, part.resolve(x2d.shape), policy.algo
+    )
+    return mo, stats

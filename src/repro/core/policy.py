@@ -62,6 +62,13 @@ class MoRDotPolicy:
     grad: MoRPolicy = MoRPolicy()
     # When False the bwd GEMMs run unquantized (ablation hook).
     quantize_bwd: bool = True
+    # Route all three GEMMs (fwd, dgrad, wgrad) through the
+    # mixed-representation block GEMM kernel (repro.kernels.mixed_gemm):
+    # real uint8 fp8 payloads + per-block tags/scales consumed directly
+    # by the matmul, instead of dequantize-then-bf16-dot. Requires every
+    # enabled operand policy to use square 'block' partitioning with one
+    # shared block shape.
+    fuse_gemm: bool = False
     # Beyond-paper: reuse cached decisions/scales for K steps (0 = paper
     # behaviour, recompute metrics every micro-batch).
     decision_cache_steps: int = 0

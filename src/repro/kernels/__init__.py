@@ -1,20 +1,24 @@
 from .ops import (
+    MixedOperand,
     MorSelect,
     QuantErr,
     flash_attention,
     fp8_gemm,
     gam_quant,
+    mixed_gemm,
     mor_select,
     quant_err,
     resolve_backend,
 )
 
 __all__ = [
+    "MixedOperand",
     "MorSelect",
     "QuantErr",
     "flash_attention",
     "fp8_gemm",
     "gam_quant",
+    "mixed_gemm",
     "mor_select",
     "quant_err",
     "resolve_backend",

@@ -1,0 +1,156 @@
+"""Mixed-representation block GEMM kernel (Pallas, TPU target).
+
+C = A @ B^T where both operands arrive in their *quantization view*
+(rows x contraction, blocks aligned with the dot-product direction,
+paper §3.1) and every (bm, bk) block carries its own representation tag
+and GAM scale -- the per-block decisions of the fused ``mor_select``
+kernel finally reach the matmul instead of being erased by a
+dequantize-then-bf16-GEMM round trip.
+
+Dual-buffer payload layout (see ``kernels/README.md``):
+
+  * ``payload_q``   (R, K) uint8  -- raw fp8 bits. E4M3 bit patterns for
+    tag 0 blocks, E5M2 bit patterns for tag 1 blocks, zero (don't-care)
+    for tag 2 blocks. One byte per element regardless of which fp8
+    format the block chose, so the buffer is a single dense array.
+  * ``payload_bf16``(R, K) bf16   -- original values for tag 2 (BF16
+    passthrough) blocks, zero (don't-care) elsewhere.
+
+Per (bm, bk) block the kernel bitcasts the uint8 payload to *both* fp8
+dtypes, selects by tag, divides by the block's reconstructed GAM scale,
+rounds to the stored dtype (Fig. 4: stored values are BF16 -- this makes
+the fused GEMM consume exactly the fake-quantization values of the
+training path), and upcasts to f32 for the MXU. Accumulation is f32 in a
+VMEM scratch tile over the K grid dimension (innermost, 'arbitrary').
+
+Tags (0 = E4M3, 1 = E5M2, 2 = BF16) and scales are (nr, nk) arrays that
+live whole in SMEM; each grid step reads its own two cells. Selection by
+tag is a vectorized ``where`` over in-register candidates -- no
+divergent control flow, which Mosaic would reject anyway.
+
+Grid: (R_a/bm, R_b/bn, K/bk).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import TAG_BF16, TAG_E5M2
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+__all__ = ["mixed_gemm_blocks"]
+
+
+def _decode(q_ref, bf_ref, tag, scale):
+    """One block: uint8 payload + bf16 buffer -> f32 stored values."""
+    q4 = jax.lax.bitcast_convert_type(
+        q_ref[...], jnp.float8_e4m3fn
+    ).astype(jnp.float32)
+    q5 = jax.lax.bitcast_convert_type(
+        q_ref[...], jnp.float8_e5m2
+    ).astype(jnp.float32)
+    # Stored-value semantics (Fig. 4): the dequantized fp8 value is
+    # rounded to the storage dtype before entering the matmul, exactly
+    # like the fake-quantization path.
+    f8 = (jnp.where(tag == TAG_E5M2, q5, q4) / scale).astype(bf_ref.dtype)
+    return jnp.where(tag == TAG_BF16, bf_ref[...], f8).astype(jnp.float32)
+
+
+def _kernel(a_tag_ref, a_sc_ref, b_tag_ref, b_sc_ref,
+            a_q_ref, a_bf_ref, b_q_ref, b_bf_ref, o_ref, acc_ref,
+            *, n_k: int):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _decode(a_q_ref, a_bf_ref, a_tag_ref[i, k], a_sc_ref[i, k])
+    b = _decode(b_q_ref, b_bf_ref, b_tag_ref[j, k], b_sc_ref[j, k])
+    # A (bm, bk) contracted with B (bn, bk) on the K axis: C = A @ B^T.
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "out_dtype", "interpret")
+)
+def mixed_gemm_blocks(
+    a_q: jnp.ndarray,
+    a_bf: jnp.ndarray,
+    a_tags: jnp.ndarray,
+    a_scales: jnp.ndarray,
+    b_q: jnp.ndarray,
+    b_bf: jnp.ndarray,
+    b_tags: jnp.ndarray,
+    b_scales: jnp.ndarray,
+    *,
+    block: Tuple[int, int, int] = (128, 128, 128),
+    out_dtype=jnp.bfloat16,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """a: (M, K) dual-buffer payloads + (M/bm, K/bk) tags/scales;
+    b: (N, K) quantization view (contraction last) likewise.
+
+    Either payload buffer of an operand may be *compact* -- a single
+    don't-care (br, bk) block (see ``ref.MixedOperand.compact``) -- in
+    which case its BlockSpec pins index (0, 0): the block stays VMEM-
+    resident and contributes no per-step HBM traffic.
+
+    Returns (M, N) = A @ B^T in out_dtype, f32-accumulated.
+    """
+    bm, bn, bk = block
+    n_m, n_k = a_tags.shape
+    n_n, n_k2 = b_tags.shape
+    assert n_k == n_k2, (a_tags.shape, b_tags.shape)
+    M, N, K = n_m * bm, n_n * bn, n_k * bk
+
+    def payload_spec(buf, br, idx):
+        if buf.shape == (br, bk):  # compact: one shared don't-care block
+            return pl.BlockSpec((br, bk), lambda i, j, k: (0, 0))
+        return pl.BlockSpec((br, bk), idx)
+
+    assert a_q.shape in ((M, K), (bm, bk)), (a_q.shape, (M, K), block)
+    assert a_bf.shape in ((M, K), (bm, bk)), (a_bf.shape, (M, K), block)
+    assert b_q.shape in ((N, K), (bn, bk)), (b_q.shape, (N, K), block)
+    assert b_bf.shape in ((N, K), (bn, bk)), (b_bf.shape, (N, K), block)
+
+    kernel = functools.partial(_kernel, n_k=n_k)
+    a_idx = lambda i, j, k: (i, k)  # noqa: E731
+    b_idx = lambda i, j, k: (j, k)  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # a_tags (nm, nk)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # a_scales (nm, nk)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # b_tags (nn, nk)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # b_scales (nn, nk)
+            payload_spec(a_q, bm, a_idx),
+            payload_spec(a_bf, bm, a_idx),
+            payload_spec(b_q, bn, b_idx),
+            payload_spec(b_bf, bn, b_idx),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a_tags, a_scales, b_tags, b_scales, a_q, a_bf, b_q, b_bf)

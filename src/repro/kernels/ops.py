@@ -28,18 +28,22 @@ from . import ref as _ref
 from .flash_attention import flash_attention_fwd
 from .fp8_gemm import fp8_gemm as _fp8_gemm_kernel
 from .gam_quant import gam_quant_blocks
+from .mixed_gemm import mixed_gemm_blocks
 from .mor_select import mor_select_blocks
-from .ref import MorSelect, QuantErr
+from .ref import MixedOperand, MorSelect, QuantErr
 
 __all__ = [
     "gam_quant",
     "quant_err",
     "mor_select",
     "fp8_gemm",
+    "mixed_gemm",
+    "mixed_dot",
     "flash_attention",
     "resolve_backend",
     "QuantErr",
     "MorSelect",
+    "MixedOperand",
 ]
 
 
@@ -199,6 +203,54 @@ def fp8_gemm(a_q, b_q, a_scale, b_scale, *, block=(128, 128, 128),
         a_q, b_q, a_scale, b_scale, block=block, out_dtype=out_dtype,
         interpret=(be == "interpret"),
     )
+
+
+def mixed_gemm(
+    a: MixedOperand,
+    b: MixedOperand,
+    *,
+    out_dtype=jnp.bfloat16,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Mixed-representation block GEMM: C = A @ B^T, unpadded (M, N).
+
+    Both operands arrive in their quantization view (rows x contraction,
+    see :class:`~repro.kernels.ref.MixedOperand`); every block is decoded
+    per its tag (E4M3 / E5M2 / BF16 passthrough) in-register and the
+    product is f32-accumulated -- one fused kernel launch on TPU versus
+    the dequantize-then-bf16-matmul lowering it replaces.
+    """
+    be = resolve_backend(backend)
+    if be == "xla":
+        return _ref.mixed_gemm_ref(a, b, out_dtype)
+    assert a.block[1] == b.block[1], (a.block, b.block)
+    out = mixed_gemm_blocks(
+        a.payload_q, a.payload_bf16, a.tags, a.scales,
+        b.payload_q, b.payload_bf16, b.tags, b.scales,
+        block=(a.block[0], b.block[0], a.block[1]),
+        out_dtype=out_dtype,
+        interpret=(be == "interpret"),
+    )
+    return out[: a.shape[0], : b.shape[0]]
+
+
+def mixed_dot(
+    x2: jnp.ndarray,
+    mo: MixedOperand,
+    *,
+    out_dtype=jnp.bfloat16,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """x2 @ W^T for an unquantized (M, K) activation against a mixed
+    (N, K)-view operand: the shared serving wrapper behind ``qdot``,
+    ``mor_dot``'s QTensor path and the quantized lm-head -- packs the
+    activation as an all-BF16 compact pack with the row block sized to
+    the activation (decode steps have a handful of rows)."""
+    bk = mo.block[1]
+    a = _ref.passthrough_mixed(
+        x2, (_ref.activation_row_block(x2.shape[0], bk), bk)
+    )
+    return mixed_gemm(a, mo, out_dtype=out_dtype, backend=backend)
 
 
 def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,

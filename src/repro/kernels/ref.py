@@ -9,25 +9,43 @@ module, and a back-edge would close an import cycle.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.formats import E4M3, E5M2, FormatSpec, cast_to_format
 from repro.core.gam import compute_scales, scales_from_bmax
 from repro.core.metrics import E5M2_RANGE_RATIO
-from repro.core.partition import Partition, from_blocks, to_blocks
+from repro.core.partition import Partition, _pad2d, from_blocks, to_blocks
 
 __all__ = [
+    "TAG_E4M3",
+    "TAG_E5M2",
+    "TAG_BF16",
     "QuantErr",
     "MorSelect",
+    "MixedOperand",
+    "pack_mixed",
+    "passthrough_mixed",
+    "activation_row_block",
+    "decode_mixed_ref",
+    "mixed_gemm_ref",
     "gam_quant_ref",
     "quant_err_ref",
     "mor_select_ref",
     "fp8_gemm_ref",
     "flash_attention_ref",
 ]
+
+# Per-block representation tags: the contract between the MoR selection
+# (repro.kernels.mor_select emits exactly these ids), the packing layer
+# below, and the mixed-representation GEMM kernel.
+TAG_E4M3 = 0
+TAG_E5M2 = 1
+TAG_BF16 = 2
 
 
 class QuantErr(NamedTuple):
@@ -65,6 +83,247 @@ class MorSelect(NamedTuple):
     counts: jnp.ndarray
     group_amax: jnp.ndarray
     group_mantissa: jnp.ndarray
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MixedOperand:
+    """One GEMM operand in the mixed-representation block layout.
+
+    The operand is seen in its *quantization view*: (R, K) with the
+    contraction axis last, zero-padded to a multiple of ``block``.
+    Per-block storage is a dual buffer (see kernels/README.md):
+
+    payload_q:    (Rp, Kp) uint8 -- raw fp8 bits (E4M3 bit patterns for
+                  TAG_E4M3 blocks, E5M2 for TAG_E5M2; zero elsewhere).
+    payload_bf16: (Rp, Kp) original-precision buffer in the operand's
+                  stored dtype (bf16 in training); holds the original
+                  values for TAG_BF16 blocks, zero elsewhere.
+    tags:         (nr, nk) int32 per-block representation tag.
+    scales:       (nr, nk) f32 reconstructed GAM scales (1.0 for
+                  TAG_BF16 and padding-only blocks).
+    block:        (br, bk) static block shape.
+    shape:        (R, K) static logical (unpadded) shape.
+
+    Either payload buffer may be *compact*: collapsed to one don't-care
+    ``(br, bk)`` block when no (concrete) tag references it -- see
+    :meth:`compact`. A fully-fp8 weight then really is ~1 byte/element.
+    """
+
+    payload_q: jnp.ndarray
+    payload_bf16: jnp.ndarray
+    tags: jnp.ndarray
+    scales: jnp.ndarray
+    block: Tuple[int, int]
+    shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (
+            (self.payload_q, self.payload_bf16, self.tags, self.scales),
+            (self.block, self.shape),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def padded_shape(self) -> Tuple[int, int]:
+        # Derived from the tag grid, not the payloads (either buffer may
+        # be compact).
+        return (
+            self.tags.shape[-2] * self.block[0],
+            self.tags.shape[-1] * self.block[1],
+        )
+
+    def compact(self) -> "MixedOperand":
+        """Drop whichever dual buffer no tag references down to a single
+        don't-care block. Host-side only (needs concrete tags); leading
+        stack axes (layer-stacked serving weights) are preserved so
+        ``lax.scan`` slicing keeps working."""
+        tags = np.asarray(self.tags)
+        br, bk = self.block
+        lead = self.payload_q.shape[:-2]
+        out = self
+        if not (tags != TAG_BF16).any():
+            out = dataclasses.replace(
+                out, payload_q=jnp.zeros((*lead, br, bk), jnp.uint8)
+            )
+        elif not (tags == TAG_BF16).any():
+            out = dataclasses.replace(
+                out,
+                payload_bf16=jnp.zeros(
+                    (*lead, br, bk), self.payload_bf16.dtype
+                ),
+            )
+        return out
+
+    def transpose(self) -> "MixedOperand":
+        """The transposed quantization view (exact: per-block tags,
+        scales and payloads are permutation-invariant under block
+        transpose)."""
+        assert self.tags.ndim == 2, (
+            "transpose() is for single-matrix operands; slice a stacked "
+            "operand per layer first (lax.scan or _layer_mo)"
+        )
+        return MixedOperand(
+            payload_q=self.payload_q.T,
+            payload_bf16=self.payload_bf16.T,
+            tags=self.tags.T,
+            scales=self.scales.T,
+            block=(self.block[1], self.block[0]),
+            shape=(self.shape[1], self.shape[0]),
+        )
+
+    def dequant(self) -> jnp.ndarray:
+        """Stored (Fig. 4: original-dtype) values, unpadded (R, K)."""
+        R, K = self.shape
+        return decode_mixed_ref(self)[:R, :K]
+
+
+def pack_mixed(
+    x2d: jnp.ndarray,
+    tags: jnp.ndarray,
+    block: Tuple[int, int],
+    algo: str = "gam",
+) -> MixedOperand:
+    """Real-quantize a 2-D operand into the mixed block layout.
+
+    ``tags`` is the (nr, nk) per-block representation decision (e.g.
+    ``MorSelect.sel`` or a broadcast tensor-level accept). The fp8 bits
+    and GAM scales are computed exactly as the fake-quantization path
+    does (same ``scales_from_bmax``, same saturating cast), so
+    ``decode_mixed_ref(pack_mixed(x, tags)) == mor fake-quant output``
+    bit-for-bit for the selected blocks.
+    """
+    br, bk = block
+    part = Partition("block", (br, bk))
+    xb = to_blocks(x2d, part)  # (nr, nk, br, bk) original dtype
+    nr, nk = xb.shape[:2]
+    assert tags.shape == (nr, nk), (tags.shape, (nr, nk))
+
+    bmax = jnp.max(jnp.abs(xb), axis=(2, 3)).astype(jnp.float32)
+    s4 = scales_from_bmax(bmax, E4M3, algo).scale
+    s5 = scales_from_bmax(bmax, E5M2, algo).scale
+    xf = xb.astype(jnp.float32)
+
+    def bits(scale, fmt):
+        xs = jnp.clip(
+            xf * scale[:, :, None, None], -fmt.amax, fmt.amax
+        ).astype(fmt.dtype)
+        return jax.lax.bitcast_convert_type(xs, jnp.uint8)
+
+    t = tags[:, :, None, None]
+    payload_q = jnp.where(
+        t == TAG_E4M3, bits(s4, E4M3),
+        jnp.where(t == TAG_E5M2, bits(s5, E5M2), jnp.uint8(0)),
+    )
+    payload_bf16 = jnp.where(t == TAG_BF16, xb, jnp.zeros_like(xb))
+    scales = jnp.where(
+        tags == TAG_E4M3, s4, jnp.where(tags == TAG_E5M2, s5, 1.0)
+    ).astype(jnp.float32)
+
+    padded = (nr * br, nk * bk)
+    return MixedOperand(
+        payload_q=from_blocks(payload_q, padded),
+        payload_bf16=from_blocks(payload_bf16, padded),
+        tags=tags.astype(jnp.int32),
+        scales=scales,
+        block=(br, bk),
+        shape=tuple(x2d.shape),
+    )
+
+
+def passthrough_mixed(
+    x2d: jnp.ndarray, block: Tuple[int, int]
+) -> MixedOperand:
+    """All-BF16 mixed layout of an unquantized operand (e.g. the
+    activation side of a serving GEMM against real-quantized weights).
+    The fp8 buffer is compact (one don't-care block) by construction."""
+    br, bk = block
+    xp = _pad2d(x2d, br, bk)
+    nr, nk = xp.shape[0] // br, xp.shape[1] // bk
+    return MixedOperand(
+        payload_q=jnp.zeros((br, bk), jnp.uint8),
+        payload_bf16=xp,
+        tags=jnp.full((nr, nk), TAG_BF16, jnp.int32),
+        scales=jnp.ones((nr, nk), jnp.float32),
+        block=(br, bk),
+        shape=tuple(x2d.shape),
+    )
+
+
+def activation_row_block(m: int, bk: int) -> int:
+    """Row-block size for a passthrough activation pack: full K blocks,
+    rows padded only to the 16-sublane TPU tile (decode activations have
+    a handful of rows -- padding them to a 128-row block would inflate
+    the hot serving GEMM ~8-32x)."""
+    return min(bk, -(-m // 16) * 16)
+
+
+def _full_buffer(buf, padded_shape, fill_dtype):
+    """A compact (single-block) payload decodes as zeros; its tags never
+    reference it, so the values are don't-care."""
+    if tuple(buf.shape) == tuple(padded_shape):
+        return buf
+    return jnp.zeros(padded_shape, fill_dtype)
+
+
+def decode_mixed_ref(mo: MixedOperand) -> jnp.ndarray:
+    """Padded (Rp, Kp) stored values in the operand's original dtype --
+    the exact values the mixed GEMM kernel reconstructs in-register."""
+    br, bk = mo.block
+    part = Partition("block", (br, bk))
+    qb = to_blocks(
+        _full_buffer(mo.payload_q, mo.padded_shape, jnp.uint8), part
+    )
+    q4 = jax.lax.bitcast_convert_type(qb, jnp.float8_e4m3fn).astype(
+        jnp.float32
+    )
+    q5 = jax.lax.bitcast_convert_type(qb, jnp.float8_e5m2).astype(
+        jnp.float32
+    )
+    t = mo.tags[:, :, None, None]
+    s = mo.scales[:, :, None, None]
+    f8 = (jnp.where(t == TAG_E5M2, q5, q4) / s).astype(
+        mo.payload_bf16.dtype
+    )
+    bfb = to_blocks(
+        _full_buffer(
+            mo.payload_bf16, mo.padded_shape, mo.payload_bf16.dtype
+        ),
+        part,
+    )
+    yb = jnp.where(t == TAG_BF16, bfb, f8)
+    return from_blocks(yb, mo.padded_shape)
+
+
+def mixed_gemm_ref(
+    a: MixedOperand,
+    b: MixedOperand,
+    out_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """Reference mixed-representation GEMM: C = A @ B^T, unpadded (M, N).
+
+    Decodes both operands to their stored values, then accumulates in
+    f32 one K-block at a time in the kernel's grid order, so interpret
+    mode and this XLA lowering are bit-identical.
+    """
+    assert a.block[1] == b.block[1], (a.block, b.block)
+    Ka, Kb = a.padded_shape[1], b.padded_shape[1]
+    assert Ka == Kb, (a.padded_shape, b.padded_shape)
+    bk = a.block[1]
+    A = decode_mixed_ref(a).astype(jnp.float32)
+    B = decode_mixed_ref(b).astype(jnp.float32)
+    acc = jnp.zeros((A.shape[0], B.shape[0]), jnp.float32)
+    for k in range(Ka // bk):
+        sl = slice(k * bk, (k + 1) * bk)
+        acc = acc + jax.lax.dot_general(
+            A[:, sl], B[:, sl], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    M, N = a.shape[0], b.shape[0]
+    return acc[:M, :N].astype(out_dtype)
 
 
 def _blocked_quant_err(xb: jnp.ndarray, fmt: FormatSpec, algo: str):

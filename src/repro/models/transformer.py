@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import N_BWD_EVENTS, STATS_WIDTH, MoRDotPolicy
 from repro.core.linear import mor_dot
+from repro.kernels import ops as kops
 
 from . import blocks as B
 from . import recurrent as R
@@ -575,9 +576,19 @@ def forward(
 
     x = B.norm(params["final_norm"], x, cfg)
     head = params["embed"].T if cfg.tie_embed else params["lm_head"]
-    logits = jnp.einsum(
-        "bsd,dv->bsv", x, head, preferred_element_type=jnp.float32
-    )
+    if hasattr(head, "as_mixed_operand"):
+        # Real-quantized serving head (serve.quantized.QTensor): feed
+        # the stored per-block payloads straight into the mixed GEMM.
+        mo = head.as_mixed_operand()  # (Vp, d) quantization view
+        bsz, seq = x.shape[0], x.shape[1]
+        logits = kops.mixed_dot(
+            x.reshape(-1, x.shape[-1]), mo,
+            out_dtype=jnp.float32, backend=policy.weight.backend,
+        ).reshape(bsz, seq, head.shape[1])
+    else:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x, head, preferred_element_type=jnp.float32
+        )
     # Mask padded vocab columns (Megatron-style; no resharding slice).
     col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, Vp), 2)
     logits = jnp.where(col < cfg.vocab, logits, -1e30)

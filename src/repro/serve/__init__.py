@@ -1,5 +1,11 @@
 from .engine import Engine, Request, ServeConfig
-from .quantized import QTensor, qdot, quantize_params, quantize_weight
+from .quantized import (
+    QTensor,
+    qdot,
+    quantize_params,
+    quantize_weight,
+    quantize_weight_stacked,
+)
 
 __all__ = ["Engine", "Request", "ServeConfig", "QTensor", "qdot",
-           "quantize_params", "quantize_weight"]
+           "quantize_params", "quantize_weight", "quantize_weight_stacked"]

@@ -16,13 +16,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import MoRDotPolicy
+from repro.core import MoRDotPolicy, MoRPolicy
 from repro.models import (
     init_cache,
     make_decode_fn,
     make_prefill_fn,
     make_tokens,
 )
+
+from .quantized import quantize_params
 
 __all__ = ["Request", "ServeConfig", "Engine"]
 
@@ -44,9 +46,20 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, cfg: ArchConfig, policy: MoRDotPolicy, params,
-                 scfg: ServeConfig = ServeConfig()):
+                 scfg: ServeConfig = ServeConfig(),
+                 quantize: Optional[MoRPolicy] = None,
+                 quantize_min_size: int = 1 << 16):
+        """``quantize``: optional ahead-of-time MoR storage decision --
+        weight leaves become sub-tensor QTensors (per-block E4M3 / E5M2
+        / BF16 payloads) and every prefill/decode matmul against them
+        runs through the mixed-representation block GEMM kernel."""
         self.cfg = cfg
         self.scfg = scfg
+        self.qstats = None
+        if quantize is not None:
+            params, self.qstats = quantize_params(
+                params, quantize, min_size=quantize_min_size
+            )
         self.params = params
         self.tokens = make_tokens(cfg)
         self._prefill = jax.jit(make_prefill_fn(cfg, policy))

@@ -1,134 +1,260 @@
-"""Real-quantization path for serving: QTensor weights (FP8 payload +
-GAM scale metadata) decided ahead-of-time by the MoR metric.
+"""Real-quantization path for serving: sub-tensor QTensor weights
+(mixed-representation block layout) decided ahead-of-time by the MoR
+metric.
 
 Training uses fake quantization (paper Fig. 4); at serving time the same
-MoR decision becomes a *storage* decision: tensors whose relative error
-passes th_E4M3 are stored as E4M3 bytes + (group mantissa, per-block E8M0
-exponents); the rest stay BF16. Matmuls against QTensors dequantize
-per-block (repro.kernels.fp8_gemm on TPU; jnp fallback elsewhere),
-halving weight HBM traffic for the quantized tensors -- decode is
-weight-bandwidth-bound, so this is the serving speedup (DESIGN.md §3).
+MoR decision becomes a *storage* decision -- now per 128x128 block, not
+per tensor: each block of a weight is stored as E4M3 bytes, E5M2 bytes,
+or BF16 passthrough (``repro.kernels.ref.MixedOperand``: uint8 fp8
+payload + original-precision buffer + per-block tag/GAM-scale arrays),
+exactly the layout the mixed-representation block GEMM consumes.
+``qdot`` feeds the stored payloads straight into
+``repro.kernels.ops.mixed_gemm`` (one fused kernel launch on TPU; jnp
+reference elsewhere) -- no dequantized weight copy is ever
+materialized.
+
+Storage/bandwidth accounting (decode is weight-bandwidth-bound, so
+this is the serving speedup): a weight whose blocks all quantize
+stores ~1 byte/element -- the bf16 side of the dual buffer collapses
+to one don't-care block (``MixedOperand.compact``) that stays
+VMEM-resident -- i.e. half the dense bf16 bytes. A genuinely *mixed*
+weight currently keeps both buffers dense (3 bytes/element; the fused
+lowering, not the byte count, is this layout's win there); streaming
+only each block's chosen payload needs the ragged per-block DMA
+follow-up noted in kernels/README.md. ``QTensor.nbytes`` reports the
+truth.
+
+The MoR recipe is whatever the policy says: 'tensor' reproduces the old
+all-or-nothing behaviour (every block E4M3 or every block BF16), 'sub2'
+and 'sub3' make genuinely mixed tensors. Layer-stacked (L, K, N)
+weights quantize per layer (``quantize_weight_stacked``); the scan over
+the block stack slices the QTensor leaves, so every block-stack GEMM of
+the engine runs through the mixed kernel too.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import E4M3, MoRPolicy, Partition
-from repro.core.gam import compute_scales
-from repro.core.mor import partition_of, quant_dequant_with_scales
-from repro.core.metrics import relative_error
+from repro.core import MoRPolicy
+from repro.core.mor import quantize_for_gemm
+from repro.kernels import ops as kops
+from repro.kernels.ref import TAG_BF16, MixedOperand
 
-__all__ = ["QTensor", "quantize_weight", "qdot", "quantize_params"]
+__all__ = [
+    "QTensor",
+    "quantize_weight",
+    "quantize_weight_stacked",
+    "qdot",
+    "quantize_params",
+]
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class QTensor:
-    """FP8 payload + GAM scales, or a BF16 passthrough (data_bf16)."""
+    """A real-quantized weight: per-block mixed-representation storage.
 
-    data_fp8: Optional[jnp.ndarray]  # (M, K) float8_e4m3fn scaled values
-    scale: Optional[jnp.ndarray]  # (nm, nk) f32 reconstructed scales
-    data_bf16: Optional[jnp.ndarray]
-    block: Tuple[int, int]
+    ``mo`` is the weight's (N, K) *quantization view* (transposed so the
+    serving GEMM's contraction axis is last, paper §3.1); ``shape`` is
+    the original (K, N). ``stats`` is the STATS_WIDTH MoR stats vector
+    of the quantization event (rides along as a leaf so it survives
+    jit/donation).
+    """
+
+    mo: MixedOperand
+    stats: jnp.ndarray
     shape: Tuple[int, ...]
 
     def tree_flatten(self):
-        return (
-            (self.data_fp8, self.scale, self.data_bf16),
-            (self.block, self.shape),
-        )
+        return ((self.mo, self.stats), (self.shape,))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
+    def as_mixed_operand(self) -> MixedOperand:
+        """The hook ``core.linear.mor_dot`` dispatches on: serving
+        matmuls consume the payloads directly via the mixed kernel."""
+        return self.mo
+
+    @property
+    def is_stacked(self) -> bool:
+        """Layer-stacked weight: leaves carry a leading layer axis that
+        ``lax.scan`` over the block stack slices off per layer."""
+        return self.mo.tags.ndim == 3
+
+    @property
+    def nbytes(self) -> int:
+        """Actual storage bytes (payloads + tags + scales + stats)."""
+        return int(sum(
+            l.size * l.dtype.itemsize
+            for l in jax.tree_util.tree_leaves(self)
+        ))
+
+    # ---- host-side inspection helpers (concrete arrays only) --------
+    @property
+    def tags(self) -> jnp.ndarray:
+        return self.mo.tags
+
     @property
     def is_quantized(self) -> bool:
-        return self.data_fp8 is not None
+        """True if any block is stored as fp8 payload."""
+        return bool((np.asarray(self.mo.tags) != TAG_BF16).any())
+
+    @property
+    def frac_quantized(self) -> float:
+        return float((np.asarray(self.mo.tags) != TAG_BF16).mean())
 
     def dequant(self) -> jnp.ndarray:
-        if not self.is_quantized:
-            return self.data_bf16
-        bm, bk = self.block
-        M, K = self.data_fp8.shape
-        xb = self.data_fp8.astype(jnp.float32).reshape(
-            M // bm, bm, K // bk, bk
-        )
-        xb = xb / self.scale[:, None, :, None]
-        return xb.reshape(M, K)[: self.shape[0], : self.shape[1]].astype(
-            jnp.bfloat16
-        )
+        """(K, N) -- or (L, K, N) if stacked -- bf16 reconstruction
+        (tests / legacy fallback path)."""
+        if not self.is_stacked:
+            return self.mo.dequant().T.astype(jnp.bfloat16)
+        mats = [
+            _layer_mo(self.mo, l).dequant().T
+            for l in range(self.mo.tags.shape[0])
+        ]
+        return jnp.stack(mats).astype(jnp.bfloat16)
 
 
-def _pad_to(x: jnp.ndarray, bm: int, bk: int) -> jnp.ndarray:
-    m, k = x.shape
-    return jnp.pad(x, ((0, (-m) % bm), (0, (-k) % bk)))
+def _layer_mo(mo: MixedOperand, l: int) -> MixedOperand:
+    """Layer ``l``'s 2-D view of a stacked MixedOperand (host-side; the
+    in-graph equivalent is lax.scan's leading-axis slicing)."""
+    return MixedOperand(
+        payload_q=mo.payload_q[l] if mo.payload_q.ndim == 3
+        else mo.payload_q,
+        payload_bf16=mo.payload_bf16[l] if mo.payload_bf16.ndim == 3
+        else mo.payload_bf16,
+        tags=mo.tags[l],
+        scales=mo.scales[l],
+        block=mo.block,
+        shape=mo.shape,
+    )
 
 
 def quantize_weight(
     w: jnp.ndarray, policy: MoRPolicy
 ) -> Tuple[QTensor, Dict[str, float]]:
-    """Apply the MoR tensor-level decision to one weight matrix.
+    """Apply the MoR decision to one weight matrix, per block.
 
-    Returns a QTensor (FP8 if the Eq. 2 metric accepts, else BF16) plus
-    decision stats. Host-side, ahead of serving.
+    Runs the policy's recipe on the (N, K) transposed view (contraction
+    last for the serving GEMM) and packs the winning representation of
+    every block for real (``quantize_for_gemm`` handles the disabled
+    policy as an all-BF16 passthrough pack). Host-side, ahead of
+    serving. Returns the QTensor plus decision stats.
     """
     assert w.ndim == 2
-    part = partition_of(policy)
-    scales = compute_scales(w, part, E4M3, algo=policy.algo)
-    wq = quant_dequant_with_scales(w, part, E4M3, scales)
-    err = float(relative_error(w, wq))
-    ok = policy.enabled and err < policy.threshold
-    bm, bk = part.resolve(w.shape)
-    if ok:
-        wp = _pad_to(w.astype(jnp.float32), bm, bk)
-        M, K = wp.shape
-        xb = wp.reshape(M // bm, bm, K // bk, bk)
-        payload = (
-            jnp.clip(
-                xb * scales.scale[:, None, :, None], -E4M3.amax, E4M3.amax
-            )
-            .astype(jnp.float8_e4m3fn)
-            .reshape(M, K)
+    pol = policy if policy.partition == "block" else policy.replace(
+        partition="block"
+    )
+    mo, stats = quantize_for_gemm(w.T, pol)
+    qt = QTensor(mo.compact(), stats, tuple(w.shape))
+    s = np.asarray(stats)
+    return qt, {
+        "rel_err": float(s[1]),
+        "quantized": float(qt.frac_quantized > 0),
+        "frac_e4m3": float(s[3]),
+        "frac_e5m2": float(s[4]),
+        "frac_bf16": float(s[5]),
+    }
+
+
+def quantize_weight_stacked(
+    w3: jnp.ndarray, policy: MoRPolicy
+) -> Tuple[QTensor, Dict[str, float]]:
+    """Per-block MoR decision for a layer-stacked (L, K, N) weight.
+
+    Each layer quantizes independently (own group amax / decisions);
+    the resulting MixedOperand leaves carry a leading L axis that
+    ``lax.scan`` over the block stack slices per layer, so the scanned
+    model body sees ordinary 2-D QTensors.
+    """
+    assert w3.ndim == 3
+    pol = policy if policy.partition == "block" else policy.replace(
+        partition="block"
+    )
+    packed = [quantize_for_gemm(w3[l].T, pol) for l in range(w3.shape[0])]
+    mo = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[m for m, _ in packed]
+    )
+    stats = jnp.stack([s for _, s in packed])
+    qt = QTensor(mo.compact(), stats, tuple(w3.shape[1:]))
+    s = np.asarray(stats)
+    return qt, {
+        "rel_err": float(s[:, 1].mean()),
+        "quantized": float(qt.frac_quantized > 0),
+        "frac_e4m3": float(s[:, 3].mean()),
+        "frac_e5m2": float(s[:, 4].mean()),
+        "frac_bf16": float(s[:, 5].mean()),
+    }
+
+
+def qdot(x: jnp.ndarray, qw: QTensor, *, backend: str = "auto"
+         ) -> jnp.ndarray:
+    """x @ W for a (single-matrix) sub-tensor QTensor weight.
+
+    The activation is wrapped as an all-BF16 pack and both operands go
+    through the mixed-representation block GEMM -- a single fused kernel
+    launch per GEMM on TPU, the jnp reference under ``backend='xla'``.
+    """
+    if qw.is_stacked:
+        raise ValueError(
+            "qdot takes a single-matrix QTensor; a layer-stacked weight "
+            "is consumed per layer by lax.scan slicing (or slice it "
+            "host-side first)"
         )
-        qt = QTensor(payload, scales.scale, None, (bm, bk), tuple(w.shape))
-    else:
-        qt = QTensor(None, None, w.astype(jnp.bfloat16), (bm, bk),
-                     tuple(w.shape))
-    return qt, {"rel_err": err, "quantized": float(ok)}
+    x2, lead = x.reshape(-1, x.shape[-1]), x.shape[:-1]
+    y = kops.mixed_dot(x2, qw.mo, out_dtype=x.dtype, backend=backend)
+    return y.reshape(*lead, qw.shape[1])
 
 
-def qdot(x: jnp.ndarray, qw: QTensor) -> jnp.ndarray:
-    """x @ W for a QTensor weight (dequant-fused in XLA; fp8_gemm on TPU)."""
-    w = qw.dequant()
-    return jnp.dot(
-        x, w, preferred_element_type=jnp.float32
-    ).astype(x.dtype)
+def _is_gemm_weight(name: str, leaf) -> bool:
+    """True for leaves that feed a mor_dot / head GEMM as the weight.
+
+    Excluded by name *segment*: embeddings, norm scales (``ln1/scale``
+    etc. -- stacked norm scales are 2-D and would otherwise slip past a
+    substring check), routers (consumed by a plain einsum), biases.
+    2-D = single matrix, 3-D = layer-stacked; 4-D stacked-expert MoE
+    weights are not supported yet.
+    """
+    if not hasattr(leaf, "ndim") or leaf.ndim not in (2, 3):
+        return False
+    for seg in name.split("/"):
+        if (
+            "embed" in seg or "norm" in seg or seg.startswith("ln")
+            or seg in ("scale", "bias", "router")
+        ):
+            return False
+    return True
 
 
 def quantize_params(params, policy: MoRPolicy, min_size: int = 1 << 16):
-    """Quantize every >=2-D weight leaf of a model params tree; returns
-    (new tree with QTensor leaves where accepted, per-leaf stats)."""
+    """Quantize every GEMM-weight leaf of a model params tree (single
+    matrices and layer-stacked (L, K, N) weights alike); returns (new
+    tree with QTensor leaves, per-leaf stats). ``min_size`` bounds the
+    per-matrix element count below which a leaf stays dense."""
     stats: Dict[str, Dict[str, float]] = {}
 
     def visit(path, leaf):
         name = "/".join(
             str(getattr(k, "key", getattr(k, "idx", k))) for k in path
         )
-        if (
-            hasattr(leaf, "ndim") and leaf.ndim == 2
-            and leaf.size >= min_size and "embed" not in name
-            and "norm" not in name
-        ):
+        if not _is_gemm_weight(name, leaf):
+            return leaf
+        per_matrix = leaf.shape[-2] * leaf.shape[-1]
+        if per_matrix < min_size:
+            return leaf
+        if leaf.ndim == 2:
             qt, st = quantize_weight(leaf, policy)
-            stats[name] = st
-            return qt
-        return leaf
+        else:
+            qt, st = quantize_weight_stacked(leaf, policy)
+        stats[name] = st
+        return qt
 
     new = jax.tree_util.tree_map_with_path(visit, params)
     return new, stats

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import MoRDotPolicy
+from repro.core import STATS_WIDTH, MoRDotPolicy
 from repro.models import make_loss_fn, make_tokens
 from repro.models.common import constrain
 from repro.optim.adamw import AdamWConfig, OptState, adamw_update
@@ -44,7 +44,8 @@ def summarize_mor_stats(fwd_stats, bwd_stats) -> Dict[str, jnp.ndarray]:
         leaves = [
             l.reshape(-1, l.shape[-1])[:, idx]
             for l in jax.tree.leaves(tree)
-            if hasattr(l, "ndim") and l.ndim >= 1 and l.shape[-1] == 8
+            if hasattr(l, "ndim") and l.ndim >= 1
+            and l.shape[-1] == STATS_WIDTH
         ]
         if not leaves:
             return jnp.float32(0.0)

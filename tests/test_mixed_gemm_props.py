@@ -1,0 +1,76 @@
+"""Hypothesis property sweeps for the mixed-representation block GEMM.
+
+Kept in their own module so the whole-module ``importorskip`` guard
+(conftest convention: hypothesis is an optional test extra; a missing
+import must collect as a skip, not an error) only removes the property
+sweeps -- the deterministic differential suite lives in
+``test_mixed_gemm.py``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'hypothesis' test extra"
+)
+st = pytest.importorskip("hypothesis.strategies")
+
+from repro.core import MoRPolicy, mor_quantize
+from repro.core.mor import quantize_for_gemm
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.kernels.ref import pack_mixed
+
+
+def _rand(shape, seed=0, scale=1.0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+def _pack(shape, seed, dtype, block=64, scale=2.0):
+    x = _rand(shape, seed=seed, scale=scale, dtype=dtype)
+    br = min(block, shape[0])
+    bk = min(block, shape[1])
+    nr, nk = -(-shape[0] // br), -(-shape[1] // bk)
+    tags = jnp.asarray(
+        np.random.default_rng(seed).integers(0, 3, (nr, nk)), jnp.int32
+    )
+    return pack_mixed(x, tags, (br, bk), "gam")
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(
+    m=st.integers(8, 140),
+    n=st.integers(8, 140),
+    k=st.integers(8, 300),
+    seed=st.integers(0, 2**16),
+    dtype=st.sampled_from(["f32", "bf16"]),
+    scale_exp=st.integers(-3, 3),
+)
+def test_property_backends_agree(m, n, k, seed, dtype, scale_exp):
+    """Random shapes / tags / magnitudes: interpret == ref == xla,
+    bit-exact."""
+    dt = jnp.float32 if dtype == "f32" else jnp.bfloat16
+    a = _pack((m, k), seed, dt, scale=10.0 ** scale_exp)
+    b = _pack((n, k), seed + 1, dt, scale=10.0 ** scale_exp)
+    got = kops.mixed_gemm(a, b, out_dtype=jnp.float32, backend="interpret")
+    want = kref.mixed_gemm_ref(a, b, jnp.float32)
+    assert got.shape == (m, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@hypothesis.settings(deadline=None, max_examples=15)
+@hypothesis.given(
+    seed=st.integers(0, 2**16),
+    recipe=st.sampled_from(["tensor", "sub2", "sub3", "e4m3"]),
+)
+def test_property_decode_pack_roundtrip(seed, recipe):
+    """pack -> decode reproduces the fake-quant output bit-for-bit for
+    every recipe's block decisions."""
+    x = _rand((128, 256), seed=seed, scale=3.0, dtype=jnp.bfloat16)
+    pol = MoRPolicy(recipe=recipe, partition="block", backend="xla")
+    mo, _ = quantize_for_gemm(x, pol)
+    y, _ = mor_quantize(x, pol)
+    np.testing.assert_array_equal(
+        np.asarray(mo.dequant(), np.float32), np.asarray(y, np.float32)
+    )

@@ -198,6 +198,96 @@ def test_disabled_recipe_passthrough():
 
 
 # ------------------------------------------------------------------------
+# Fused mixed-GEMM parity: mor_dot(fuse_gemm=True) vs the fake-quant
+# path. Same decisions -> bit-identical stats rows (fwd and bwd token
+# cotangent); outputs and grads agree to f32-accumulation-order
+# tolerance (the decoded operand values are bit-identical, only the
+# K-block summation order differs).
+# ------------------------------------------------------------------------
+def _mor_dot_outputs(policy, seed=0, shape=((4, 48, 130), (130, 96))):
+    import jax
+
+    from repro.core import mor_dot, new_token
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(shape[0]), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal(shape[1]), jnp.bfloat16)
+
+    def loss(xa, wa, tok):
+        y, st = mor_dot(xa, wa, tok, policy)
+        return jnp.sum(y.astype(jnp.float32) ** 2), (y, st)
+
+    grad_fn = jax.value_and_grad(loss, argnums=(0, 1, 2), has_aux=True)
+    (_, (y, fwd_stats)), (gx, gw, gtok) = grad_fn(x, w, new_token())
+    return y, fwd_stats, gx, gw, gtok
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("recipe", RECIPES)
+def test_fuse_gemm_parity(recipe, algo):
+    from repro.core import paper_default
+
+    base = paper_default(recipe, algo=algo)
+    base = base.replace(
+        act=base.act.replace(backend="xla"),
+        weight=base.weight.replace(backend="xla"),
+        grad=base.grad.replace(backend="xla"),
+    )
+    seed = sum(map(ord, recipe + algo))
+    y0, st0, gx0, gw0, gt0 = _mor_dot_outputs(base, seed)
+    y1, st1, gx1, gw1, gt1 = _mor_dot_outputs(
+        base.replace(fuse_gemm=True), seed
+    )
+    # Stats rows: one shared decision path -> bit-identical.
+    np.testing.assert_array_equal(np.asarray(st0), np.asarray(st1))
+    np.testing.assert_array_equal(np.asarray(gt0), np.asarray(gt1))
+    # Outputs/grads: identical operand values, f32 ordering tolerance.
+    for a, b in ((y0, y1), (gx0, gx1), (gw0, gw1)):
+        af = np.asarray(a, np.float32)
+        bf = np.asarray(b, np.float32)
+        tol = 2e-2 * max(np.abs(af).max(), 1.0)
+        np.testing.assert_allclose(af, bf, rtol=2e-2, atol=tol * 1e-2)
+
+
+def test_fuse_gemm_parity_interpret_backend():
+    """The Pallas kernel bodies (interpret mode) keep the same parity."""
+    from repro.core import paper_default
+
+    base = paper_default("sub3")
+    base = base.replace(
+        act=base.act.replace(backend="interpret"),
+        weight=base.weight.replace(backend="interpret"),
+        grad=base.grad.replace(backend="interpret"),
+    )
+    y0, st0, _, _, gt0 = _mor_dot_outputs(base, seed=3)
+    y1, st1, _, _, gt1 = _mor_dot_outputs(
+        base.replace(fuse_gemm=True), seed=3
+    )
+    np.testing.assert_allclose(
+        np.asarray(st0), np.asarray(st1), rtol=1e-6, atol=1e-7
+    )
+    np.testing.assert_allclose(
+        np.asarray(gt0), np.asarray(gt1), rtol=1e-6, atol=1e-7
+    )
+    np.testing.assert_allclose(
+        np.asarray(y0, np.float32), np.asarray(y1, np.float32),
+        rtol=2e-2, atol=2e-1,
+    )
+
+
+def test_fuse_gemm_rejects_channel_partition():
+    import jax
+
+    from repro.core import mor_dot, new_token, paper_default
+
+    p = paper_default("sub3", partition="channel").replace(fuse_gemm=True)
+    x = _rand((8, 64), dtype=jnp.bfloat16)
+    w = _rand((64, 32), dtype=jnp.bfloat16)
+    with pytest.raises(ValueError, match="partition='block'"):
+        mor_dot(x, w, jnp.zeros((4, 8), jnp.float32), p)
+
+
+# ------------------------------------------------------------------------
 # GAM no-saturation invariant (hypothesis-free property sweep).
 # ------------------------------------------------------------------------
 @pytest.mark.parametrize("fmt", [E4M3, E5M2], ids=["e4m3", "e5m2"])

@@ -192,3 +192,89 @@ def test_quantize_params_tree():
     assert len(stats) > 0
     frac_q = np.mean([s["quantized"] for s in stats.values()])
     assert frac_q > 0.9  # gaussian init weights all quantize
+
+
+def test_engine_decode_with_quantized_weights():
+    """The serving engine over sub-tensor QTensor weights: every matmul
+    against a quantized leaf runs through the mixed-representation block
+    GEMM, and greedy decode still completes."""
+    cfg = dataclasses.replace(reduced(get_config("llama3-8b")), vocab=128)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(
+        cfg, TENSOR_MOR, params, ServeConfig(slots=2, max_seq=64),
+        quantize=MoRPolicy(recipe="sub3"), quantize_min_size=1024,
+    )
+    assert eng.qstats and any(
+        s["quantized"] for s in eng.qstats.values()
+    ), eng.qstats
+    # The layer-stacked block weights must be covered, not just lm_head.
+    assert any("blocks/" in name for name in eng.qstats), eng.qstats
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(i, rng.integers(0, 128, 8).astype(np.int32), max_tokens=4)
+        for i in range(3)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    for r in reqs:
+        assert r.done and len(r.out) >= 4
+        assert all(0 <= t < 128 for t in r.out)
+
+
+def test_train_step_with_fused_mixed_gemm():
+    """A full jitted train step (scan over layers, remat, custom_vjp,
+    ZeRO-2 constraints) with every GEMM routed through the mixed-
+    representation kernel: finite loss, stats populated."""
+    from repro.core import paper_default
+    from repro.data import SyntheticLM
+    from repro.optim import init_opt_state
+    from repro.train import make_train_step
+
+    cfg = dataclasses.replace(
+        reduced(get_config("llama3-8b")), vocab=128
+    )
+    pol = paper_default("sub3")
+    pol = pol.replace(
+        act=pol.act.replace(backend="xla"),
+        weight=pol.weight.replace(backend="xla"),
+        grad=pol.grad.replace(backend="xla"),
+        fuse_gemm=True,
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(
+        cfg, pol,
+        TrainConfig(optimizer=AdamWConfig(
+            peak_lr=1e-3, final_lr=1e-4, warmup_steps=2, total_steps=10
+        )),
+    ))
+    data = SyntheticLM(DataConfig(vocab=128, seq_len=32, global_batch=4))
+    batch = jax.tree.map(jnp.asarray, data.batch_at(0))
+    params, opt, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    # The mixed path must still report MoR decisions.
+    assert float(m["fwd_rel_err"]) > 0.0
+
+
+# ------------------------------------------------------------ mor stats --
+def test_summarize_mor_stats_uses_stats_width():
+    """Regression: train_step's stats-leaf filter must track STATS_WIDTH
+    (it used to hard-code 8 and would silently drop every stats row if
+    the layout grew)."""
+    from repro.core import STATS_WIDTH
+    from repro.train.train_step import summarize_mor_stats
+
+    row = np.zeros((3, STATS_WIDTH), np.float32)
+    row[:, 5] = 0.5  # frac_bf16
+    row[:, 1] = 0.25  # rel_err
+    fwd = {"layer": jnp.asarray(row)}
+    # Decoys with a non-STATS_WIDTH trailing dim must be ignored.
+    bwd = {
+        "stats": jnp.asarray(row),
+        "decoy": jnp.ones((4, STATS_WIDTH + 1), jnp.float32),
+    }
+    out = summarize_mor_stats(fwd, bwd)
+    assert float(out["fwd_frac_bf16"]) == pytest.approx(0.5)
+    assert float(out["fwd_rel_err"]) == pytest.approx(0.25)
+    assert float(out["bwd_frac_bf16"]) == pytest.approx(0.5)

@@ -3,11 +3,24 @@ reference / interpret paths; on a TPU host the same harness times the
 Pallas kernels) + derived bandwidth.
 
 ``--smoke`` runs a reduced matrix (CI lane); ``--json PATH`` writes the
-rows as a machine-readable artifact.
+rows as a machine-readable artifact conforming to the frozen
+``repro.bench_kernels/v1`` schema (``benchmarks/schema.py``,
+documented in ``benchmarks/README.md``).
+
+The sharded lane (``kernel/*_sharded_*`` rows) needs >= 4 devices;
+on a single-device host it respawns itself in a subprocess with 4
+forced CPU host devices (``launch.mesh.host_device_env``) and merges
+the child's rows, so every artifact records the multi-device story.
+``--no-sharded`` skips it; ``--sharded-child`` is the internal child
+mode.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import jax
@@ -21,11 +34,18 @@ from repro.core.metrics import E5M2_RANGE_RATIO
 from repro.core.mor import quantize_for_gemm
 from repro.core.partition import Partition, from_blocks, to_blocks
 from repro.kernels import ref as kref
-from repro.kernels.ops import gam_quant, mixed_gemm, mor_select
+from repro.kernels.ops import (
+    gam_quant,
+    mixed_gemm,
+    mor_select,
+    sharded_mixed_gemm,
+)
 from repro.kernels.ref import passthrough_mixed
 from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import host_device_env
 
 from .common import csv_row
+from .schema import make_artifact
 
 
 def _time(fn, *args, iters=10):
@@ -186,9 +206,142 @@ def _bench_mixed_gemm(rows, rng, smoke: bool):
     )
 
 
-def main(smoke: bool = False):
+def _sharded_rows(smoke: bool):
+    """Multi-device lane (>= 4 devices): the sharded mixed GEMM and the
+    allreduced-stats quantization under shard_map vs their replicated
+    single-device baselines, with per-shard fused-kernel launch counts
+    from the TPU cross-lowering of the shard-local computation.
+
+    Own fixed seed so the in-process and --sharded-child paths bench
+    identical data."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.collectives import compat_shard_map
+
+    rng = np.random.default_rng(7)
+    rows = []
+    ndev = 4
+    mesh = jax.make_mesh((ndev,), ("data",))
+    M = N = K = 512
+    bm = 128
+    pol = MoRPolicy(recipe="sub3", partition="block", backend="xla")
+    w = jnp.asarray(rng.standard_normal((N, K)), jnp.bfloat16)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
+    mo, _ = quantize_for_gemm(w, pol)
+    iters = 3 if smoke else 10
+
+    def replicated(a):
+        return mixed_gemm(
+            passthrough_mixed(a, (bm, bm)), mo, backend="xla"
+        )
+
+    def row_sharded(a):
+        return sharded_mixed_gemm(
+            passthrough_mixed(a, (bm, bm)), mo, mesh=mesh,
+            row_axis="data", backend="xla",
+        )
+
+    us_rep = _time(jax.jit(replicated), x, iters=iters)
+    us_sh = _time(jax.jit(row_sharded), x, iters=iters)
+
+    # Per-shard launch count: cross-lower the shard-local computation
+    # (rows/ndev of the activation against the full weight) for TPU.
+    def pallas_gemm(a):
+        return mixed_gemm(
+            passthrough_mixed(a, (bm, bm)), mo, backend="pallas"
+        )
+
+    try:
+        per_shard = _tpu_kernel_launches(pallas_gemm, x[: M // ndev])
+        rep_launches = _tpu_kernel_launches(pallas_gemm, x)
+    except Exception:  # older jax without cross-platform lowering
+        per_shard = rep_launches = -1
+    tag = f"{M}x{N}x{K}"
+    rows.append(csv_row(
+        f"kernel/gemm_sharded_row_data{ndev}_{tag}", us_sh,
+        f"devices={ndev};axis=data;"
+        f"per_shard_tpu_kernel_launches={per_shard};"
+        f"replicated_tpu_kernel_launches={rep_launches};"
+        f"us_replicated={us_rep:.1f}",
+    ))
+
+    # Contraction-sharded lane: per-shard partials + one f32 psum.
+    def k_sharded(a):
+        return sharded_mixed_gemm(
+            passthrough_mixed(a, (bm, bm)), mo, mesh=mesh,
+            contract_axis="data", backend="xla",
+        )
+
+    us_k = _time(jax.jit(k_sharded), x, iters=iters)
+    rows.append(csv_row(
+        f"kernel/gemm_sharded_contract_data{ndev}_{tag}", us_k,
+        f"devices={ndev};axis=data;reduce=psum_f32;"
+        f"us_replicated={us_rep:.1f}",
+    ))
+
+    # Allreduced-stats quantization under shard_map vs single-device:
+    # same decisions bit-for-bit (tests/test_sharded_mor.py), cost is
+    # one extra pmax/psum handful on scalars.
+    qpol = MoRPolicy(recipe="sub3", partition="block", backend="xla")
+    qpol_sh = qpol.replace(mesh_axes=("data",))
+    xq = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.bfloat16)
+    us_q1 = _time(jax.jit(lambda a: mor_quantize(a, qpol)[0]), xq,
+                  iters=iters)
+    sm = jax.jit(compat_shard_map(
+        lambda a: mor_quantize(a, qpol_sh)[0], mesh,
+        P("data", None), P("data", None),
+    ))
+    us_q4 = _time(sm, xq, iters=iters)
+    rows.append(csv_row(
+        f"kernel/mor_quantize_sharded_data{ndev}_1024", us_q4,
+        f"devices={ndev};axis=data;stats=allreduced;"
+        f"us_single_device={us_q1:.1f};invariance=bit_identical_tags",
+    ))
+    return rows
+
+
+def _bench_sharded(rows, smoke: bool):
+    """Run the sharded lane here if this process already has >= 4
+    devices, else respawn in a 4-forced-host-device subprocess and
+    merge its rows (XLA fixes the device count at backend init)."""
+    if len(jax.devices()) >= 4:
+        rows.extend(_sharded_rows(smoke))
+        return
+    with tempfile.TemporaryDirectory() as td:
+        tmp = os.path.join(td, "sharded.json")
+        cmd = [sys.executable, "-m", "benchmarks.bench_kernels",
+               "--sharded-child", "--json", tmp]
+        if smoke:
+            cmd.append("--smoke")
+        try:
+            proc = subprocess.run(
+                cmd, env=host_device_env(4), capture_output=True,
+                text=True, timeout=900, cwd=os.getcwd(),
+            )
+            if proc.returncode != 0:
+                raise RuntimeError(proc.stderr[-500:])
+            with open(tmp) as f:
+                child = json.load(f)
+            rows.extend(
+                csv_row(r["name"], r["us"], r["derived"])
+                for r in child["rows"]
+            )
+        except Exception as e:  # never fail the whole bench
+            reason = str(e).replace(";", ",").replace("=", ":")
+            reason = " ".join(reason.split())[:120] or "unknown"
+            rows.append(csv_row(
+                "kernel/gemm_sharded_skipped", 0.0,
+                f"skipped=1;reason={reason}",
+            ))
+
+
+def main(smoke: bool = False, sharded: bool = True,
+         sharded_only: bool = False):
     rows = []
     rng = np.random.default_rng(0)
+
+    if sharded_only:
+        return _sharded_rows(smoke), None
 
     # Mixed-representation block GEMM vs legacy dequant+matmul.
     _bench_mixed_gemm(rows, rng, smoke)
@@ -274,6 +427,10 @@ def main(smoke: bool = False):
         csv_row("kernel/chunked_attention_b2s512", us,
                 f"GFLOP/s={flops / (us * 1e-6) / 1e9:.1f}")
     )
+
+    # Multi-device sharded lane (possibly via a forced-device child).
+    if sharded:
+        _bench_sharded(rows, smoke)
     return rows, None
 
 
@@ -284,16 +441,25 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="reduced matrix for the CI bench lane")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write rows as a JSON artifact")
+                    help="write rows as a repro.bench_kernels/v1 artifact")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the multi-device sharded lane")
+    ap.add_argument("--sharded-child", action="store_true",
+                    help="internal: run only the sharded lane "
+                         "(spawned with forced host devices)")
     args = ap.parse_args()
-    out_rows = main(smoke=args.smoke)[0]
+    out_rows = main(
+        smoke=args.smoke,
+        sharded=not args.no_sharded,
+        sharded_only=args.sharded_child,
+    )[0]
     for row in out_rows:
         print(row)
     if args.json:
-        recs = []
-        for row in out_rows:
-            name, us, derived = row.split(",", 2)
-            recs.append({"name": name, "us": float(us), "derived": derived})
+        artifact = make_artifact(out_rows)
         with open(args.json, "w") as f:
-            json.dump(recs, f, indent=2)
-        print(f"wrote {len(recs)} rows to {args.json}")
+            json.dump(artifact, f, indent=2)
+        print(
+            f"wrote {len(artifact['rows'])} rows to {args.json} "
+            f"({artifact['schema']})"
+        )

@@ -1,0 +1,125 @@
+"""Frozen schema for the ``bench_kernels --json`` artifact.
+
+PR 1 and PR 2 wrote a bare list of rows whose key names drifted between
+lanes; this module freezes the contract (documented in
+``benchmarks/README.md``) and validates artifacts against it -- CI's
+slow lane runs ``python -m benchmarks.schema bench_kernels.json`` after
+the bench smoke, so a drifting producer fails the build instead of
+silently breaking downstream consumers.
+
+Schema ``repro.bench_kernels/v1``::
+
+    {
+      "schema": "repro.bench_kernels/v1",
+      "rows": [
+        {"name": "kernel/<lane>_<variant>[_<size>]",   # row id
+         "us":   12.3,                                  # mean wall us/call
+         "derived": "key=value;key2=value2"}            # lane metrics
+      ]
+    }
+
+* ``name`` matches ``^kernel/[A-Za-z0-9._-]+$`` and is unique per
+  artifact.
+* ``us`` is a non-negative finite number (0.0 for lanes that only
+  record counts, e.g. TPU cross-lowering launch counts).
+* ``derived`` is a ``;``-separated list of ``key=value`` items (value
+  text is free-form; keys must be non-empty and ``=`` must be present
+  in every non-empty item).
+
+Stdlib-only on purpose: consumers should not need jax to validate.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+import sys
+from typing import Any, Dict, List
+
+SCHEMA = "repro.bench_kernels/v1"
+_NAME_RE = re.compile(r"^kernel/[A-Za-z0-9._-]+$")
+
+__all__ = ["SCHEMA", "make_artifact", "validate_artifact", "rows_from_csv"]
+
+
+def rows_from_csv(csv_rows: List[str]) -> List[Dict[str, Any]]:
+    """Parse ``common.csv_row`` strings into schema row dicts."""
+    recs = []
+    for row in csv_rows:
+        name, us, derived = row.split(",", 2)
+        recs.append({"name": name, "us": float(us), "derived": derived})
+    return recs
+
+
+def make_artifact(csv_rows: List[str]) -> Dict[str, Any]:
+    """The versioned artifact object for a list of csv_row strings."""
+    return {"schema": SCHEMA, "rows": rows_from_csv(csv_rows)}
+
+
+def validate_artifact(doc: Any) -> None:
+    """Raise ValueError unless ``doc`` conforms to SCHEMA."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"artifact must be an object, got {type(doc)}")
+    extra = set(doc) - {"schema", "rows"}
+    if extra:
+        raise ValueError(f"unknown top-level keys: {sorted(extra)}")
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(
+            f"schema mismatch: {doc.get('schema')!r} != {SCHEMA!r}"
+        )
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("rows must be a non-empty list")
+    seen = set()
+    for i, row in enumerate(rows):
+        ctx = f"rows[{i}]"
+        if not isinstance(row, dict):
+            raise ValueError(f"{ctx}: must be an object")
+        if set(row) != {"name", "us", "derived"}:
+            raise ValueError(
+                f"{ctx}: keys must be exactly name/us/derived, "
+                f"got {sorted(row)}"
+            )
+        name = row["name"]
+        if not isinstance(name, str) or not _NAME_RE.match(name):
+            raise ValueError(f"{ctx}: bad name {name!r}")
+        if name in seen:
+            raise ValueError(f"{ctx}: duplicate name {name!r}")
+        seen.add(name)
+        us = row["us"]
+        if (
+            not isinstance(us, (int, float)) or isinstance(us, bool)
+            or not math.isfinite(us) or us < 0
+        ):
+            raise ValueError(f"{ctx}: bad us {us!r}")
+        derived = row["derived"]
+        if not isinstance(derived, str):
+            raise ValueError(f"{ctx}: derived must be a string")
+        for item in derived.split(";"):
+            if not item:
+                continue
+            key, eq, _ = item.partition("=")
+            if not eq or not key.strip():
+                raise ValueError(
+                    f"{ctx}: derived item {item!r} is not key=value"
+                )
+
+
+def main(argv: List[str]) -> int:
+    if len(argv) != 1:
+        print("usage: python -m benchmarks.schema ARTIFACT.json",
+              file=sys.stderr)
+        return 2
+    with open(argv[0]) as f:
+        doc = json.load(f)
+    try:
+        validate_artifact(doc)
+    except ValueError as e:
+        print(f"SCHEMA INVALID: {e}", file=sys.stderr)
+        return 1
+    print(f"schema OK: {argv[0]} ({len(doc['rows'])} rows, {SCHEMA})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

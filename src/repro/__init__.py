@@ -1,0 +1,2 @@
+"""MoR: Mixture Of Representations for mixed-precision training --
+JAX/Pallas reproduction. See docs/architecture.md for the module map."""

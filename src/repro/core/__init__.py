@@ -23,6 +23,7 @@ from .partition import (
     Partition,
     block_amax,
 )
+from .collectives import compat_shard_map, pmax_over, psum_over
 from .policy import (
     BF16_BASELINE,
     SUBTENSOR2_MOR,
@@ -31,6 +32,7 @@ from .policy import (
     MoRDotPolicy,
     MoRPolicy,
     paper_default,
+    with_mesh_axes,
 )
 from .stats import MoRStatsTracker, RelErrHistogram
 
@@ -44,6 +46,7 @@ __all__ = [
     "PER_BLOCK_64", "PER_BLOCK_128", "PER_CHANNEL", "PER_TENSOR",
     "SUB_CHANNEL_128", "Partition", "block_amax",
     "BF16_BASELINE", "SUBTENSOR2_MOR", "SUBTENSOR3_MOR", "TENSOR_MOR",
-    "MoRDotPolicy", "MoRPolicy", "paper_default",
+    "MoRDotPolicy", "MoRPolicy", "paper_default", "with_mesh_axes",
+    "compat_shard_map", "pmax_over", "psum_over",
     "MoRStatsTracker", "RelErrHistogram",
 ]

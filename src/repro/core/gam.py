@@ -85,10 +85,18 @@ def compute_scales(
 
 
 def scales_from_bmax(
-    bmax: jnp.ndarray, fmt: FormatSpec, algo: str = "gam"
+    bmax: jnp.ndarray, fmt: FormatSpec, algo: str = "gam",
+    group_amax: jnp.ndarray | None = None,
 ) -> GamScales:
-    """Algorithm 1 from precomputed per-block amax (fused callers)."""
-    g_amax = jnp.max(bmax)
+    """Algorithm 1 from precomputed per-block amax (fused callers).
+
+    ``group_amax`` overrides the group amax (default: max over the
+    supplied block amaxes). Mesh-sharded events pass the allreduced
+    global amax here so the shared mantissa ``m_g`` -- and with it every
+    per-block scale -- is bit-identical across any sharding of the
+    group (docs/sharding.md).
+    """
+    g_amax = jnp.max(bmax) if group_amax is None else group_amax
 
     # Zero guards: all-zero tensor / all-zero (or padding-only) blocks get
     # scale 1.0 -- quantizing zeros is exact under any scale.

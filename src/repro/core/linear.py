@@ -83,6 +83,31 @@ def mor_dot(x, w, token, policy: MoRDotPolicy):
     """y = MoR(x) @ MoR(w).  x: (..., K), w: (K, N), token: new_token().
 
     Returns (y: (..., N) in x.dtype, fwd_stats: (N_FWD_EVENTS, STATS_WIDTH)).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.linear import mor_dot, new_token
+    >>> from repro.core.policy import SUBTENSOR3_MOR
+    >>> x = jnp.ones((4, 128), jnp.bfloat16)
+    >>> w = jnp.ones((128, 32), jnp.bfloat16)
+    >>> y, fwd_stats = mor_dot(x, w, new_token(), SUBTENSOR3_MOR)
+    >>> y.shape, fwd_stats.shape       # one stats row per fwd event
+    ((4, 32), (2, 8))
+    >>> float(y[0, 0])                 # ones @ ones, exact under fp8
+    128.0
+
+    The fused GEMM lowering is a policy flag, not a different API:
+
+    >>> yf, _ = mor_dot(x, w, new_token(), SUBTENSOR3_MOR.replace(
+    ...     fuse_gemm=True))
+    >>> bool(jnp.allclose(yf.astype(jnp.float32), y.astype(jnp.float32)))
+    True
+
+    Mesh-sharded use (docs/sharding.md): inside a ``shard_map`` body,
+    run mor_dot on the local batch shard with every operand policy
+    carrying ``mesh_axes`` (``core.policy.with_mesh_axes``). The
+    quantization decisions then match the single-device run
+    bit-for-bit; the wgrad output is a per-shard partial that the
+    caller psums over the batch axes, exactly like an unquantized dot.
     """
     out, _ = _fwd(x, w, token, policy)
     return out

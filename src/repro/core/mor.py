@@ -14,6 +14,13 @@ kernels, their interpret-mode validation, and the pure-jnp XLA lowering
 share one implementation. The recipe layer only aggregates the per-block
 sums into decisions and the stats vector below.
 
+Mesh-sharded events (``MoRPolicy.mesh_axes`` non-empty, inside
+``shard_map``): all tensor-global aggregates in this module -- the
+Eq. 2 error/count sums, the stats fractions, and (via the kernel entry
+points) the group amax behind the Alg. 1 mantissa -- are allreduced
+over the named axes, so per-block decisions are bit-identical to the
+single-device run. See docs/sharding.md.
+
 Stats vector layout (f32, STATS_WIDTH):
   [0] decision        1.0 if the preferred low-precision type was accepted
                       (tensor-level), or fraction of blocks in E4M3 (sub-*).
@@ -31,6 +38,7 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
+from .collectives import global_size, pmax_over, psum_over
 from .formats import E4M3, E5M2, FormatSpec, cast_to_format
 from .gam import GamScales, compute_scales
 from .partition import Partition, from_blocks, to_blocks
@@ -101,18 +109,23 @@ def _tensor_level(x2d: jnp.ndarray, policy: MoRPolicy):
 
     The quantization uses the policy's partitioning for scales, but the
     accept/reject decision is a single global one: per-partition local
-    errors aggregated globally (Fig. 2) vs the Eq. 2 threshold.
+    errors aggregated globally (Fig. 2) vs the Eq. 2 threshold. Under
+    ``policy.mesh_axes`` the error/count aggregates are psum'd across
+    the mesh, so every shard takes the same accept/reject branch as the
+    single-device run.
     """
+    axes = policy.mesh_axes
     part = partition_of(policy)
     q = kops.quant_err(
-        x2d, part, E4M3, policy.algo, backend=policy.backend
+        x2d, part, E4M3, policy.algo, backend=policy.backend,
+        mesh_axes=axes,
     )
-    n = jnp.maximum(jnp.sum(q.counts), 1.0)
-    err = jnp.sum(q.err_sums) / n
+    n = jnp.maximum(psum_over(jnp.sum(q.counts), axes), 1.0)
+    err = psum_over(jnp.sum(q.err_sums), axes) / n
     ok = err < policy.threshold
     y = jnp.where(ok, q.y, x2d)
     okf = ok.astype(jnp.float32)
-    nz = jnp.sum(q.counts) / jnp.float32(x2d.size)
+    nz = psum_over(jnp.sum(q.counts), axes) / global_size(x2d.size, axes)
     stats = _stats(
         okf, err, q.group_amax, okf, 0.0, 1.0 - okf, nz, q.group_mantissa,
     )
@@ -131,16 +144,19 @@ def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
     fused pass per block (`kops.mor_select`); only the stats aggregation
     lives here.
     """
+    axes = policy.mesh_axes
     part = partition_of(policy)
     r = kops.mor_select(
         x2d, part, mode=policy.recipe, algo=policy.algo,
-        backend=policy.backend,
+        backend=policy.backend, mesh_axes=axes,
     )
-    nblocks = jnp.float32(r.sel.size)
-    nz = jnp.sum(r.counts) / jnp.float32(x2d.size)
-    tot_n = jnp.maximum(jnp.sum(r.counts), 1.0)
-    global_e4_err = jnp.sum(r.e4_sums) / tot_n
-    f4 = jnp.sum((r.sel == 0).astype(jnp.float32)) / nblocks
+    nblocks = psum_over(jnp.float32(r.sel.size), axes)
+    nz = psum_over(jnp.sum(r.counts), axes) / global_size(x2d.size, axes)
+    tot_n = jnp.maximum(psum_over(jnp.sum(r.counts), axes), 1.0)
+    global_e4_err = psum_over(jnp.sum(r.e4_sums), axes) / tot_n
+    f4 = psum_over(
+        jnp.sum((r.sel == 0).astype(jnp.float32)), axes
+    ) / nblocks
 
     if policy.recipe == "sub2":
         stats = _stats(
@@ -149,7 +165,9 @@ def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
         )
         return r.y, stats, r.sel
 
-    f5 = jnp.sum((r.sel == 1).astype(jnp.float32)) / nblocks
+    f5 = psum_over(
+        jnp.sum((r.sel == 1).astype(jnp.float32)), axes
+    ) / nblocks
     stats = _stats(
         f4, global_e4_err, r.group_amax, f4, f5, 1.0 - f4 - f5, nz,
         r.group_mantissa,
@@ -158,22 +176,28 @@ def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
 
 
 def _static_e4m3(x2d: jnp.ndarray, policy: MoRPolicy):
+    axes = policy.mesh_axes
     part = partition_of(policy)
     q = kops.quant_err(
-        x2d, part, E4M3, policy.algo, backend=policy.backend
+        x2d, part, E4M3, policy.algo, backend=policy.backend,
+        mesh_axes=axes,
     )
-    n = jnp.maximum(jnp.sum(q.counts), 1.0)
-    err = jnp.sum(q.err_sums) / n
-    nz = jnp.sum(q.counts) / jnp.float32(x2d.size)
+    n = jnp.maximum(psum_over(jnp.sum(q.counts), axes), 1.0)
+    err = psum_over(jnp.sum(q.err_sums), axes) / n
+    nz = psum_over(jnp.sum(q.counts), axes) / global_size(x2d.size, axes)
     stats = _stats(1.0, err, q.group_amax, 1.0, 0.0, 0.0, nz,
                    q.group_mantissa)
     tags = jnp.full(q.err_sums.shape, TAG_E4M3, jnp.int32)
     return q.y, stats, tags
 
 
-def _off_stats(x2d: jnp.ndarray) -> jnp.ndarray:
-    nz = jnp.mean((x2d != 0).astype(jnp.float32))
-    amax = jnp.max(jnp.abs(x2d.astype(jnp.float32)))
+def _off_stats(x2d: jnp.ndarray, mesh_axes=()) -> jnp.ndarray:
+    nz = psum_over(
+        jnp.sum((x2d != 0).astype(jnp.float32)), mesh_axes
+    ) / global_size(x2d.size, mesh_axes)
+    amax = pmax_over(
+        jnp.max(jnp.abs(x2d.astype(jnp.float32))), mesh_axes
+    )
     return _stats(0.0, 0.0, amax, 0.0, 0.0, 1.0, nz, 1.0)
 
 
@@ -202,9 +226,27 @@ def mor_quantize(
     Returns ``(y, stats)`` where ``y`` has x2d's dtype and shape and
     ``stats`` is the STATS_WIDTH f32 vector documented in the module
     docstring. Contraction axis must be the last axis of ``x2d``.
+
+    When ``policy.mesh_axes`` is non-empty the call must run inside a
+    ``shard_map`` binding those axis names; ``x2d`` is then this
+    device's shard and every global statistic is allreduced, making the
+    per-block decisions bit-identical to the single-device run
+    (docs/sharding.md).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.mor import mor_quantize
+    >>> from repro.core.policy import MoRPolicy
+    >>> x = jnp.ones((128, 128), jnp.bfloat16)
+    >>> y, stats = mor_quantize(x, MoRPolicy(recipe="sub3"))
+    >>> y.shape == x.shape and y.dtype == x.dtype
+    True
+    >>> stats.shape            # the STATS_WIDTH vector
+    (8,)
+    >>> float(stats[5])        # all-ones quantizes exactly: no BF16 blocks
+    0.0
     """
     if not policy.enabled:
-        return x2d, _off_stats(x2d)
+        return x2d, _off_stats(x2d, policy.mesh_axes)
     y, stats, _ = _decide(x2d, policy)
     return y.astype(x2d.dtype), stats
 
@@ -230,12 +272,26 @@ def quantize_for_gemm(
     candidates in-register but only writes the winner + stats).
     Emitting payloads directly from the selection kernel is the local
     follow-up that removes this extra pass (kernels/README.md).
+
+    Under ``policy.mesh_axes`` (inside shard_map) the pack receives the
+    allreduced group amax, so a shard packs exactly the payload bytes,
+    tags and GAM scales its blocks would get on one device.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.mor import quantize_for_gemm
+    >>> from repro.core.policy import MoRPolicy
+    >>> x = jnp.ones((128, 128), jnp.bfloat16)
+    >>> mo, stats = quantize_for_gemm(x, MoRPolicy(recipe="sub3"))
+    >>> mo.payload_q.shape, str(mo.payload_q.dtype), mo.tags.shape
+    ((128, 128), 'uint8', (1, 1))
+    >>> bool((mo.dequant() == x).all())   # decodes bit-for-bit
+    True
     """
     if not policy.enabled:
         part = Partition("block", policy.block_shape)
         return (
             _kref.passthrough_mixed(x2d, part.resolve(x2d.shape)),
-            _off_stats(x2d),
+            _off_stats(x2d, policy.mesh_axes),
         )
     if policy.partition != "block":
         raise ValueError(
@@ -245,7 +301,11 @@ def quantize_for_gemm(
         )
     part = partition_of(policy)
     _, stats, tags = _decide(x2d, policy)
+    # stats[2] is the group amax the decision path used -- already
+    # allreduced under mesh_axes -- so the pack's Alg. 1 scales can
+    # never disagree with the decisions in `tags`.
     mo = _kref.pack_mixed(
-        x2d, tags, part.resolve(x2d.shape), policy.algo
+        x2d, tags, part.resolve(x2d.shape), policy.algo,
+        group_amax=stats[2],
     )
     return mo, stats

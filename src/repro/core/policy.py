@@ -16,7 +16,8 @@ import dataclasses
 from typing import Optional, Tuple
 
 __all__ = ["MoRPolicy", "MoRDotPolicy", "TENSOR_MOR", "SUBTENSOR2_MOR",
-           "SUBTENSOR3_MOR", "BF16_BASELINE", "paper_default"]
+           "SUBTENSOR3_MOR", "BF16_BASELINE", "paper_default",
+           "with_mesh_axes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +36,27 @@ class MoRPolicy:
       quantization events of this policy use (see repro.kernels.ops;
       'auto' resolves to the Pallas kernels on TPU, interpret mode under
       REPRO_KERNEL_INTERPRET=1, and the XLA reference otherwise).
+    mesh_axes: mesh axis names this event's operand is sharded (or
+      replicated) over *inside a shard_map*. When non-empty, every
+      tensor-global statistic -- group amax (hence the Alg. 1 shared
+      mantissa), Eq. 2/3 error aggregates, the stats-vector fractions --
+      is allreduced over these axes before any decision consumes it, so
+      the per-block tags and GAM scales chosen on N devices are
+      *bit-identical* to the single-device choice (docs/sharding.md;
+      tests/test_sharded_mor.py). Must be () outside shard_map: the
+      collectives need the axis names bound.
+
+    Example -- a policy is a frozen, hashable value object (it rides
+    through jit static args), and ``replace`` derives variants:
+
+    >>> from repro.core.policy import MoRPolicy
+    >>> p = MoRPolicy(recipe="sub3", block_shape=(64, 64))
+    >>> p.enabled, p.threshold
+    (True, 0.045)
+    >>> p.replace(mesh_axes=("data",)).mesh_axes
+    ('data',)
+    >>> p == MoRPolicy(recipe="sub3", block_shape=(64, 64))
+    True
     """
 
     recipe: str = "tensor"
@@ -44,6 +66,12 @@ class MoRPolicy:
     threshold: float = 0.045  # th_E4M3, paper default 4.5%
     algo: str = "gam"  # 'gam' | 'e8m0' | 'fp32_amax'
     backend: str = "auto"  # 'auto' | 'pallas' | 'interpret' | 'xla'
+    mesh_axes: Tuple[str, ...] = ()  # shard_map axes to allreduce over
+
+    def __post_init__(self):
+        # Lists are a footgun (unhashable under jit static args).
+        object.__setattr__(self, "mesh_axes", tuple(self.mesh_axes))
+        object.__setattr__(self, "block_shape", tuple(self.block_shape))
 
     @property
     def enabled(self) -> bool:
@@ -96,6 +124,28 @@ def paper_default(
         algo=algo,
     )
     return MoRDotPolicy(act=p, weight=p, grad=p)
+
+
+def with_mesh_axes(
+    policy: MoRDotPolicy, axes: Tuple[str, ...]
+) -> MoRDotPolicy:
+    """The same dot policy with every operand event allreducing its
+    global statistics over ``axes`` (for bodies running inside
+    ``shard_map``). Safe to apply uniformly: a *replicated* operand's
+    decisions are unchanged because every decision-bearing aggregate is
+    a ratio of two psums (docs/sharding.md, 'replication safety').
+
+    >>> from repro.core.policy import SUBTENSOR3_MOR, with_mesh_axes
+    >>> dp = with_mesh_axes(SUBTENSOR3_MOR, ("data",))
+    >>> dp.act.mesh_axes, dp.weight.mesh_axes, dp.grad.mesh_axes
+    (('data',), ('data',), ('data',))
+    """
+    axes = tuple(axes)
+    return policy.replace(
+        act=policy.act.replace(mesh_axes=axes),
+        weight=policy.weight.replace(mesh_axes=axes),
+        grad=policy.grad.replace(mesh_axes=axes),
+    )
 
 
 TENSOR_MOR = paper_default("tensor")

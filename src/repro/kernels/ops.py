@@ -19,6 +19,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.collectives import compat_shard_map, pmax_over
 from repro.core.formats import E4M3, E5M2, FormatSpec
 from repro.core.gam import split_mantissa_exponent
 from repro.core.metrics import E5M2_RANGE_RATIO
@@ -39,6 +40,7 @@ __all__ = [
     "fp8_gemm",
     "mixed_gemm",
     "mixed_dot",
+    "sharded_mixed_gemm",
     "flash_attention",
     "resolve_backend",
     "QuantErr",
@@ -77,9 +79,14 @@ def _kernel_backend(backend: str, part: Partition) -> str:
     return be
 
 
-def _group_amax(x: jnp.ndarray):
-    """(g_amax, zero-guarded g_amax): one global XLA reduce."""
-    g_amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+def _group_amax(x: jnp.ndarray, mesh_axes=()):
+    """(g_amax, zero-guarded g_amax): one global XLA reduce, allreduced
+    over ``mesh_axes`` when the operand is a shard_map shard -- the
+    group amax (and the Alg. 1 mantissa derived from it) must be the
+    amax of the *whole* tensor, not of this device's shard."""
+    g_amax = pmax_over(
+        jnp.max(jnp.abs(x.astype(jnp.float32))), mesh_axes
+    )
     return g_amax, jnp.where(g_amax > 0, g_amax, 1.0)
 
 
@@ -98,20 +105,24 @@ def quant_err(
     algo: str = "gam",
     *,
     backend: str = "auto",
+    mesh_axes=(),
 ) -> QuantErr:
     """Fused quantize + per-block error sums of a 2-D operand.
 
     Backend-dispatched core of the 'tensor' and 'e4m3' recipes. Handles
     block-non-divisible shapes by zero-padding (zeros quantize exactly
     and are excluded from the error sums/counts by construction).
+    ``mesh_axes``: shard_map axes to allreduce the group amax over
+    (x is then this device's shard; returned err_sums/counts stay
+    shard-local, ``group_amax``/``group_mantissa`` are global).
     """
     be = _kernel_backend(backend, part)
     if be == "xla":
-        return _ref.quant_err_ref(x, part, fmt, algo)
+        return _ref.quant_err_ref(x, part, fmt, algo, mesh_axes=mesh_axes)
     M, K = x.shape
     bm, bk = part.resolve(x.shape)
     xp = _pad2d(x, bm, bk)
-    g_amax, safe_g = _group_amax(x)
+    g_amax, safe_g = _group_amax(x, mesh_axes)
     m_g = _group_mantissa(safe_g, fmt, algo)
     xq, _, err_sums, counts = gam_quant_blocks(
         xp, m_g,
@@ -134,20 +145,24 @@ def mor_select(
     algo: str = "gam",
     *,
     backend: str = "auto",
+    mesh_axes=(),
 ) -> MorSelect:
     """Fused sub-tensor MoR selection (§3.2) of a 2-D operand.
 
     One pass per block: both fp8 candidates, Eq. 3 error comparison,
     Eq. 4 range gate (sub3), and the per-block select -- versus the three
-    full operand passes of the naive lowering.
+    full operand passes of the naive lowering. ``mesh_axes``: shard_map
+    axes to allreduce the group amax over (per-block sums/selects stay
+    shard-local; the Eq. 3/4 gates are per-block, so with a global
+    amax every shard makes the single-device choice bit-for-bit).
     """
     be = _kernel_backend(backend, part)
     if be == "xla":
-        return _ref.mor_select_ref(x, part, mode, algo)
+        return _ref.mor_select_ref(x, part, mode, algo, mesh_axes=mesh_axes)
     M, K = x.shape
     bm, bk = part.resolve(x.shape)
     xp = _pad2d(x, bm, bk)
-    g_amax, safe_g = _group_amax(x)
+    g_amax, safe_g = _group_amax(x, mesh_axes)
     mg4 = _group_mantissa(safe_g, E4M3, algo)
     mg5 = _group_mantissa(safe_g, E5M2, algo)
     y, sel, e4_sums, e5_sums, counts = mor_select_blocks(
@@ -251,6 +266,105 @@ def mixed_dot(
         x2, (_ref.activation_row_block(x2.shape[0], bk), bk)
     )
     return mixed_gemm(a, mo, out_dtype=out_dtype, backend=backend)
+
+
+def _local_mixed(payload_q, payload_bf16, tags, scales, block):
+    """Rebuild a shard-local MixedOperand from shard_map-sliced leaves.
+
+    The local logical shape is the local *padded* shape: per-shard
+    padding blocks decode to zeros (zero payloads under scale 1.0), so
+    they contribute nothing to the product and the caller slices the
+    assembled global output back to the logical (M, N) once.
+    """
+    shape = (tags.shape[-2] * block[0], tags.shape[-1] * block[1])
+    return MixedOperand(payload_q, payload_bf16, tags, scales, block, shape)
+
+
+def sharded_mixed_gemm(
+    a: MixedOperand,
+    b: MixedOperand,
+    *,
+    mesh,
+    row_axis=None,
+    col_axis=None,
+    contract_axis=None,
+    out_dtype=jnp.bfloat16,
+    backend: str = "auto",
+) -> jnp.ndarray:
+    """Mesh-sharded mixed-representation GEMM: C = A @ B^T under shard_map.
+
+    Runs the block GEMM *per shard*: each device launches the fused
+    kernel on its local payload blocks with the matching local tag/scale
+    SMEM operands (tags/scales shard on the same block grid as the
+    payload BlockSpecs, so a shard's kernel sees exactly the metadata of
+    its own blocks -- see kernels/README.md). Sharding must be
+    block-aligned: each sharded axis size must divide the operand's
+    block-grid extent.
+
+      row_axis       shards A's rows      -> C rows sharded, no traffic.
+      col_axis       shards B's rows      -> C cols sharded, no traffic.
+      contract_axis  shards K of both     -> per-shard partial products
+                     are f32-psum'd before the out_dtype cast.
+
+    Compact payload buffers (see MixedOperand.compact) are replicated --
+    a single don't-care block has no row axis to shard. Operands packed
+    by ``quantize_for_gemm`` under a policy with matching ``mesh_axes``
+    carry shard-local blocks whose tags/scales are bit-identical to the
+    single-device pack (tests/test_sharded_mor.py).
+    """
+    from repro.sharding.rules import mixed_operand_pspec
+
+    assert a.block[1] == b.block[1], (a.block, b.block)
+    if a.padded_shape[1] != b.padded_shape[1]:
+        raise ValueError(
+            f"contraction extents differ: {a.padded_shape} vs "
+            f"{b.padded_shape}"
+        )
+
+    def _ax(name):
+        return mesh.shape[name] if name else 1
+
+    for mo, rax, who in ((a, row_axis, "A"), (b, col_axis, "B")):
+        if mo.tags.shape[-2] % _ax(rax):
+            raise ValueError(
+                f"{who}: row block grid {mo.tags.shape[-2]} not divisible "
+                f"by mesh axis {rax!r} ({_ax(rax)})"
+            )
+        if mo.tags.shape[-1] % _ax(contract_axis):
+            raise ValueError(
+                f"{who}: contraction block grid {mo.tags.shape[-1]} not "
+                f"divisible by mesh axis {contract_axis!r} "
+                f"({_ax(contract_axis)})"
+            )
+
+    from jax.sharding import PartitionSpec as P
+
+    a_specs = mixed_operand_pspec(a, row_axis, contract_axis)
+    b_specs = mixed_operand_pspec(b, col_axis, contract_axis)
+    inner_dtype = jnp.float32 if contract_axis else out_dtype
+    block_a, block_b = a.block, b.block
+
+    def body(aq, abf, at, asc, bq, bbf, bt, bsc):
+        out = mixed_gemm(
+            _local_mixed(aq, abf, at, asc, block_a),
+            _local_mixed(bq, bbf, bt, bsc, block_b),
+            out_dtype=inner_dtype,
+            backend=backend,
+        )
+        if contract_axis:
+            out = jax.lax.psum(out, contract_axis)
+        return out.astype(out_dtype)
+
+    sm = compat_shard_map(
+        body, mesh,
+        in_specs=a_specs + b_specs,
+        out_specs=P(row_axis, col_axis),
+    )
+    out = sm(
+        a.payload_q, a.payload_bf16, a.tags, a.scales,
+        b.payload_q, b.payload_bf16, b.tags, b.scales,
+    )
+    return out[: a.shape[0], : b.shape[0]]
 
 
 def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,

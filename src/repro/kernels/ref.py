@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.collectives import pmax_over
 from repro.core.formats import E4M3, E5M2, FormatSpec, cast_to_format
 from repro.core.gam import compute_scales, scales_from_bmax
 from repro.core.metrics import E5M2_RANGE_RATIO
@@ -186,6 +187,7 @@ def pack_mixed(
     tags: jnp.ndarray,
     block: Tuple[int, int],
     algo: str = "gam",
+    group_amax: jnp.ndarray | None = None,
 ) -> MixedOperand:
     """Real-quantize a 2-D operand into the mixed block layout.
 
@@ -195,6 +197,10 @@ def pack_mixed(
     does (same ``scales_from_bmax``, same saturating cast), so
     ``decode_mixed_ref(pack_mixed(x, tags)) == mor fake-quant output``
     bit-for-bit for the selected blocks.
+
+    ``group_amax``: the (already allreduced, when sharded) group amax;
+    must be supplied for a shard of a larger operand or the shard-local
+    Alg. 1 mantissa would diverge from the decisions in ``tags``.
     """
     br, bk = block
     part = Partition("block", (br, bk))
@@ -203,8 +209,8 @@ def pack_mixed(
     assert tags.shape == (nr, nk), (tags.shape, (nr, nk))
 
     bmax = jnp.max(jnp.abs(xb), axis=(2, 3)).astype(jnp.float32)
-    s4 = scales_from_bmax(bmax, E4M3, algo).scale
-    s5 = scales_from_bmax(bmax, E5M2, algo).scale
+    s4 = scales_from_bmax(bmax, E4M3, algo, group_amax=group_amax).scale
+    s5 = scales_from_bmax(bmax, E5M2, algo, group_amax=group_amax).scale
     xf = xb.astype(jnp.float32)
 
     def bits(scale, fmt):
@@ -326,7 +332,21 @@ def mixed_gemm_ref(
     return acc[:M, :N].astype(out_dtype)
 
 
-def _blocked_quant_err(xb: jnp.ndarray, fmt: FormatSpec, algo: str):
+def _global_amax(x: jnp.ndarray, mesh_axes) -> jnp.ndarray | None:
+    """Allreduced group amax of a sharded operand; None when unsharded
+    (scales_from_bmax then derives it from the local block amaxes --
+    bit-identical, both are exact maxima of the same elements)."""
+    if not mesh_axes:
+        return None
+    return pmax_over(
+        jnp.max(jnp.abs(x.astype(jnp.float32))), mesh_axes
+    )
+
+
+def _blocked_quant_err(
+    xb: jnp.ndarray, fmt: FormatSpec, algo: str,
+    group_amax: jnp.ndarray | None = None,
+):
     """Single-pass quantize + per-block error sums on a blocked view.
 
     xb: (nm, nk, bm, bk) in its *original* dtype (bf16 in training -- the
@@ -334,9 +354,10 @@ def _blocked_quant_err(xb: jnp.ndarray, fmt: FormatSpec, algo: str):
     never materialize in f32; per-block scale math runs in f32 on the tiny
     (nm, nk) arrays). Returns (xqb in xb.dtype, scales, err_sums f32,
     counts f32). This is the XLA analogue of the fused Pallas kernels.
+    ``group_amax`` carries the allreduced global amax for sharded events.
     """
     bmax = jnp.max(jnp.abs(xb), axis=(2, 3)).astype(jnp.float32)
-    scales = scales_from_bmax(bmax, fmt, algo)
+    scales = scales_from_bmax(bmax, fmt, algo, group_amax=group_amax)
     s = scales.scale[:, :, None, None]
     xqb_f32 = cast_to_format(xb.astype(jnp.float32) * s, fmt) / s
     xqb = xqb_f32.astype(xb.dtype)  # Fig. 4: output stays BF16
@@ -356,11 +377,14 @@ def _blocked_quant_err(xb: jnp.ndarray, fmt: FormatSpec, algo: str):
 
 
 def quant_err_ref(
-    x: jnp.ndarray, part: Partition, fmt: FormatSpec, algo: str = "gam"
+    x: jnp.ndarray, part: Partition, fmt: FormatSpec, algo: str = "gam",
+    mesh_axes=(),
 ) -> QuantErr:
     """Reference for the ops.quant_err entry point (one-format events)."""
     xb = to_blocks(x, part)
-    xqb, scales, err_sums, counts = _blocked_quant_err(xb, fmt, algo)
+    xqb, scales, err_sums, counts = _blocked_quant_err(
+        xb, fmt, algo, group_amax=_global_amax(x, mesh_axes)
+    )
     return QuantErr(
         y=from_blocks(xqb, x.shape),
         err_sums=err_sums,
@@ -371,13 +395,17 @@ def quant_err_ref(
 
 
 def mor_select_ref(
-    x: jnp.ndarray, part: Partition, mode: str = "sub3", algo: str = "gam"
+    x: jnp.ndarray, part: Partition, mode: str = "sub3", algo: str = "gam",
+    mesh_axes=(),
 ) -> MorSelect:
     """Reference for mor_select_blocks: fused §3.2 per-block selection."""
     assert mode in ("sub2", "sub3"), mode
     xb = to_blocks(x, part)
-    q4b, scales4, e4_sums, counts = _blocked_quant_err(xb, E4M3, algo)
-    q5b, _, e5_sums, _ = _blocked_quant_err(xb, E5M2, algo)
+    g = _global_amax(x, mesh_axes)
+    q4b, scales4, e4_sums, counts = _blocked_quant_err(
+        xb, E4M3, algo, group_amax=g
+    )
+    q5b, _, e5_sums, _ = _blocked_quant_err(xb, E5M2, algo, group_amax=g)
 
     m1 = e4_sums < e5_sums  # Eq. 3
     if mode == "sub2":

@@ -12,9 +12,14 @@ one CPU device.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+__all__ = [
+    "make_production_mesh", "make_local_mesh", "host_device_env",
+    "HW",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -26,6 +31,26 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many local devices exist (tests)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def host_device_env(n: int, base: dict | None = None) -> dict:
+    """Environment for a *subprocess* that should see ``n`` host (CPU)
+    devices -- the standard substrate for multi-device CPU runs
+    (tests/test_sharded_mor.py, the bench sharded lane).
+
+    XLA fixes the device count at backend init, so this cannot apply to
+    an already-running process; spawn a child with this env instead.
+    """
+    env = dict(os.environ if base is None else base)
+    flag = f"--xla_force_host_platform_device_count={n}"
+    # Drop any pre-existing count flag: the caller's n must win.
+    kept = [
+        f for f in env.get("XLA_FLAGS", "").split()
+        if "xla_force_host_platform_device_count" not in f
+    ]
+    env["XLA_FLAGS"] = " ".join(kept + [flag])
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
 
 
 class HW:

@@ -48,17 +48,37 @@ class Engine:
     def __init__(self, cfg: ArchConfig, policy: MoRDotPolicy, params,
                  scfg: ServeConfig = ServeConfig(),
                  quantize: Optional[MoRPolicy] = None,
-                 quantize_min_size: int = 1 << 16):
+                 quantize_min_size: int = 1 << 16,
+                 mesh=None):
         """``quantize``: optional ahead-of-time MoR storage decision --
         weight leaves become sub-tensor QTensors (per-block E4M3 / E5M2
         / BF16 payloads) and every prefill/decode matmul against them
-        runs through the mixed-representation block GEMM kernel."""
+        runs through the mixed-representation block GEMM kernel.
+
+        ``mesh``: optional jax Mesh for tensor-parallel serving. Params
+        (dense *and* QTensor leaves -- payloads, tags and scales shard
+        together on the block grid, see ``sharding.rules
+        .quantized_param_specs``) are placed per the Megatron TP rules,
+        so sharded serving never materializes a dequantized weight
+        copy. Example::
+
+            mesh = make_local_mesh(data=1, model=4)
+            eng = Engine(cfg, policy, params,
+                         quantize=MoRPolicy(recipe="sub3"), mesh=mesh)
+        """
         self.cfg = cfg
         self.scfg = scfg
         self.qstats = None
         if quantize is not None:
             params, self.qstats = quantize_params(
                 params, quantize, min_size=quantize_min_size
+            )
+        if mesh is not None:
+            from repro.sharding import rules as _rules
+
+            specs = _rules.quantized_param_specs(cfg, params, mesh)
+            params = jax.device_put(
+                params, _rules.named_shardings(mesh, specs)
             )
         self.params = params
         self.tokens = make_tokens(cfg)

@@ -64,6 +64,24 @@ class QTensor:
     the original (K, N). ``stats`` is the STATS_WIDTH MoR stats vector
     of the quantization event (rides along as a leaf so it survives
     jit/donation).
+
+    A QTensor is an ordinary pytree: it jits, donates, and shards. For
+    tensor-parallel serving, ``sharding.rules.qtensor_pspec_from_dense``
+    maps the dense weight's PartitionSpec onto all leaves (payloads,
+    tags, scales shard together on the block grid; stats replicate) --
+    see docs/sharding.md.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import MoRPolicy
+    >>> from repro.serve.quantized import quantize_weight
+    >>> w = jnp.ones((128, 64), jnp.bfloat16)          # (K, N)
+    >>> qt, info = quantize_weight(w, MoRPolicy(recipe="sub3"))
+    >>> qt.shape, qt.mo.shape                          # (K,N) vs (N,K) view
+    ((128, 64), (64, 128))
+    >>> qt.is_quantized, qt.frac_quantized             # every block fp8
+    (True, 1.0)
+    >>> bool((qt.dequant() == w).all())                # exact for ones
+    True
     """
 
     mo: MixedOperand
@@ -201,6 +219,17 @@ def qdot(x: jnp.ndarray, qw: QTensor, *, backend: str = "auto"
     The activation is wrapped as an all-BF16 pack and both operands go
     through the mixed-representation block GEMM -- a single fused kernel
     launch per GEMM on TPU, the jnp reference under ``backend='xla'``.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import MoRPolicy
+    >>> from repro.serve.quantized import quantize_weight, qdot
+    >>> w = jnp.ones((128, 64), jnp.bfloat16)
+    >>> qt, _ = quantize_weight(w, MoRPolicy(recipe="sub3"))
+    >>> y = qdot(jnp.ones((2, 128), jnp.bfloat16), qt)
+    >>> y.shape, str(y.dtype)
+    ((2, 64), 'bfloat16')
+    >>> float(y[0, 0])                 # ones @ ones, exact under fp8
+    128.0
     """
     if qw.is_stacked:
         raise ValueError(

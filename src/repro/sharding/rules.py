@@ -1,5 +1,5 @@
-"""Sharding rules: parameter, optimizer-state, batch and cache
-PartitionSpecs for every architecture.
+"""Sharding rules: parameter, optimizer-state, batch, cache and
+quantized-weight PartitionSpecs for every architecture.
 
 Megatron-style TP over 'model':
   wqkv / fc1 / expert-w1  -> column-parallel (shard output features)
@@ -10,20 +10,33 @@ Megatron-style TP over 'model':
 DP over ('pod','data') shards the batch. ZeRO-1: optimizer moments and
 f32 master weights are additionally sharded over 'data' on the largest
 dimension the param spec leaves free.
+
+Quantized leaves (docs/sharding.md): a ``MixedOperand`` shards *as one
+unit* -- uint8 payload, original-precision dual buffer, per-block tag
+and GAM-scale grids all partition along the same block grid
+(``mixed_operand_pspec``), so a shard owns complete blocks with their
+metadata and the mixed GEMM kernel runs shard-locally. ``QTensor``
+serving weights reuse the dense rule of the weight they replace,
+transposed into the (N, K) quantization view
+(``qtensor_pspec_from_dense``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.collectives import compat_shard_map
+from repro.kernels.ref import MixedOperand
 
 __all__ = [
     "param_specs", "opt_state_spec_from_param", "batch_spec", "cache_specs_tree",
     "named_shardings", "zero1_spec",
+    "mixed_operand_pspec", "qtensor_pspec_from_dense",
+    "quantized_param_specs", "compat_shard_map",
 ]
 
 # name-fragment -> (spec builder). Matched against the flattened path.
@@ -173,3 +186,128 @@ def named_shardings(mesh: Mesh, spec_tree):
         spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# --------------------------------------------------------- quantized --
+
+
+def mixed_operand_pspec(
+    mo: MixedOperand,
+    rows: Optional[str] = None,
+    cols: Optional[str] = None,
+) -> Tuple[P, P, P, P]:
+    """(payload_q, payload_bf16, tags, scales) PartitionSpecs for one
+    mixed-layout operand, sharding its quantization-view rows over
+    ``rows`` and its contraction blocks over ``cols``.
+
+    All four leaves partition along the same block grid, so a shard
+    owns complete blocks together with their tag/scale metadata -- the
+    invariant the per-shard mixed GEMM kernel relies on (the SMEM
+    tag/scale operands of a shard describe exactly its payload blocks).
+    A *compact* payload buffer (one don't-care block, see
+    ``MixedOperand.compact``) is replicated: it has no row extent to
+    shard and is dead weight either way. Leading stack axes
+    (layer-stacked serving weights) stay unsharded.
+    """
+    lead = mo.tags.ndim - 2
+
+    def sp(*axes) -> P:
+        return P(*([None] * lead), *axes)
+
+    def payload_spec(buf) -> P:
+        if tuple(buf.shape[-2:]) != mo.padded_shape:  # compact buffer
+            return sp(None, None)
+        return sp(rows, cols)
+
+    return (
+        payload_spec(mo.payload_q),
+        payload_spec(mo.payload_bf16),
+        sp(rows, cols),
+        sp(rows, cols),
+    )
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def qtensor_pspec_from_dense(qt, dense_spec: P, mesh: Optional[Mesh] = None):
+    """A QTensor-shaped PartitionSpec pytree from the dense rule of the
+    (K, N) weight it replaced.
+
+    The QTensor stores the weight in its transposed (N, K) quantization
+    view, so a dense ``P(a_K, a_N)`` becomes rows=``a_N``,
+    cols=``a_K`` on the mixed-operand leaves; stats are replicated.
+    Stacked weights (dense ``P(None, a_K, a_N)``) keep the leading
+    layer axis unsharded.
+
+    With ``mesh``, an axis that does not divide the *block grid* is
+    demoted to replicated: quantized leaves shard in whole 128x128
+    blocks or not at all (a split block would separate payload rows
+    from their tag/scale cell).
+    """
+    from repro.serve.quantized import QTensor  # avoid import cycle
+
+    lead = qt.mo.tags.ndim - 2
+    entries = list(dense_spec) + [None] * (lead + 2 - len(dense_spec))
+    a_k, a_n = entries[-2], entries[-1]
+    if mesh is not None:
+        nr, nk = qt.mo.tags.shape[-2], qt.mo.tags.shape[-1]
+        if nr % _axis_size(mesh, a_n):
+            a_n = None
+        if nk % _axis_size(mesh, a_k):
+            a_k = None
+    pq, pbf, tags, scales = mixed_operand_pspec(qt.mo, rows=a_n, cols=a_k)
+    mo_spec = MixedOperand(
+        payload_q=pq, payload_bf16=pbf, tags=tags, scales=scales,
+        block=qt.mo.block, shape=qt.mo.shape,
+    )
+    stats_spec = P(*([None] * qt.stats.ndim))
+    return QTensor(mo=mo_spec, stats=stats_spec, shape=qt.shape)
+
+
+def quantized_param_specs(
+    cfg: ArchConfig, params, mesh: Optional[Mesh] = None
+) -> Any:
+    """PartitionSpec pytree for a params tree whose GEMM weights were
+    replaced by QTensors (``serve.quantized.quantize_params``).
+
+    Dense leaves keep their :func:`param_specs` rule; each QTensor leaf
+    derives its spec from the dense rule of the weight it replaced, so
+    e.g. a column-parallel ``wo`` stays row-parallel in its (N, K)
+    quantization view and the serving GEMMs stay tensor-parallel
+    *without dequantizing*. ``mesh`` enables block-grid divisibility
+    demotion (see :func:`qtensor_pspec_from_dense`).
+    """
+    from repro.serve.quantized import QTensor  # avoid import cycle
+
+    def spec_for(path, leaf):
+        p = _path_str(path)
+        stacked = "blocks" in p
+        if isinstance(leaf, QTensor):
+            # Dense rule on the original (K, N) shape, stack axis
+            # re-inserted for layer-stacked weights, then transposed
+            # into the quantization view.
+            base = _leaf_spec(p, _ShapeView(leaf.shape))
+            dense = P(None, *base) if leaf.is_stacked else base
+            return qtensor_pspec_from_dense(leaf, dense, mesh)
+        base = _leaf_spec(p, _Unstacked(leaf) if stacked else leaf)
+        return P(None, *base) if stacked else base
+
+    return jax.tree_util.tree_map_with_path(
+        spec_for, params, is_leaf=lambda x: isinstance(x, QTensor)
+    )
+
+
+class _ShapeView:
+    """Duck-typed (ndim, shape) stand-in for _leaf_spec rule matching."""
+
+    def __init__(self, shape):
+        self.shape = tuple(shape)
+        self.ndim = len(self.shape)

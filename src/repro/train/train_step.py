@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import STATS_WIDTH, MoRDotPolicy
+from repro.core import STATS_WIDTH, MoRDotPolicy, with_mesh_axes
 from repro.models import make_loss_fn, make_tokens
 from repro.models.common import constrain
 from repro.optim.adamw import AdamWConfig, OptState, adamw_update
@@ -35,6 +35,15 @@ class TrainConfig:
     # GSPMD reduce-scatters them instead of all-reducing (halves DP
     # gradient traffic; optimizer math runs on the scattered shards).
     zero2_grads: bool = True
+    # shard_map embedding: when the returned step runs *inside* a
+    # shard_map body (manual SPMD, e.g. the cross-pod compressed-psum
+    # trainer), name the batch-sharded mesh axes here so every MoR
+    # quantization event allreduces its global statistics and the
+    # precision decisions match the single-device run bit-for-bit
+    # (docs/sharding.md). Leave () for the jit/GSPMD trainer: there the
+    # compiler already makes jnp reductions over sharded operands
+    # global, so no explicit collectives are needed.
+    mor_mesh_axes: Tuple[str, ...] = ()
 
 
 def summarize_mor_stats(fwd_stats, bwd_stats) -> Dict[str, jnp.ndarray]:
@@ -69,6 +78,8 @@ def make_train_step(
 ):
     """Returns train_step(params, opt_state, batch) ->
     (params, opt_state, metrics)."""
+    if tcfg.mor_mesh_axes:
+        policy = with_mesh_axes(policy, tcfg.mor_mesh_axes)
     loss_fn = make_loss_fn(
         cfg, policy, remat=tcfg.remat, aux_coef=tcfg.aux_coef
     )

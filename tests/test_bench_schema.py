@@ -1,0 +1,66 @@
+"""The frozen bench_kernels --json schema (repro.bench_kernels/v1).
+
+Pure-stdlib tests: the validator must be usable by consumers without
+jax. CI's slow lane additionally validates the real artifact produced
+by the bench smoke (``python -m benchmarks.schema bench_kernels.json``).
+"""
+import copy
+
+import pytest
+
+from benchmarks.schema import (
+    SCHEMA,
+    make_artifact,
+    rows_from_csv,
+    validate_artifact,
+)
+
+GOOD_CSV = [
+    "kernel/gemm_mixed_xla_512x512x512,2136.7,"
+    "hbm_bytes=14155776;operand_passes=26;bytes_vs_legacy=2.25x",
+    "kernel/gemm_mixed_pallas_512x512x512,0.0,tpu_kernel_launches=1",
+    "kernel/gemm_sharded_row_data4_512x512x512,1360.8,"
+    "devices=4;axis=data;per_shard_tpu_kernel_launches=1",
+]
+
+
+def test_make_artifact_roundtrip_validates():
+    doc = make_artifact(GOOD_CSV)
+    assert doc["schema"] == SCHEMA
+    validate_artifact(doc)
+    rows = rows_from_csv(GOOD_CSV)
+    assert rows[0]["name"] == "kernel/gemm_mixed_xla_512x512x512"
+    assert rows[1]["us"] == 0.0
+    # derived strings containing commas split only on the first two.
+    assert "bytes_vs_legacy=2.25x" in rows[0]["derived"]
+
+
+@pytest.mark.parametrize("mutate, match", [
+    (lambda d: d.pop("schema"), "schema mismatch"),
+    (lambda d: d.update(schema="bench/v0"), "schema mismatch"),
+    (lambda d: d.update(extra=1), "unknown top-level"),
+    (lambda d: d.update(rows=[]), "non-empty"),
+    (lambda d: d["rows"][0].update(name="gemm_no_prefix"), "bad name"),
+    (lambda d: d["rows"][0].update(name=d["rows"][1]["name"]),
+     "duplicate name"),
+    (lambda d: d["rows"][0].update(us=float("nan")), "bad us"),
+    (lambda d: d["rows"][0].update(us=-1.0), "bad us"),
+    (lambda d: d["rows"][0].update(us="12"), "bad us"),
+    (lambda d: d["rows"][0].update(derived="keyvalue_without_eq"),
+     "not key=value"),
+    (lambda d: d["rows"][0].pop("derived"), "keys must be exactly"),
+    (lambda d: d["rows"][0].update(notes="x"), "keys must be exactly"),
+])
+def test_validate_rejects_drift(mutate, match):
+    doc = copy.deepcopy(make_artifact(GOOD_CSV))
+    mutate(doc)
+    with pytest.raises(ValueError, match=match):
+        validate_artifact(doc)
+
+
+def test_legacy_bare_list_rejected():
+    """The PR 1/PR 2 artifact shape (a bare list of rows) is exactly the
+    drift this schema freezes out."""
+    legacy = rows_from_csv(GOOD_CSV)
+    with pytest.raises(ValueError, match="must be an object"):
+        validate_artifact(legacy)

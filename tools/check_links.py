@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs CI lane (stdlib only).
+
+Scans the given markdown files/directories for inline links and
+verifies that every *relative* target resolves to an existing file (and
+that ``#anchors`` into markdown targets match a real heading), so a
+renamed module or a mistyped paper-equation reference fails the build.
+
+    python tools/check_links.py README.md docs src/repro/kernels/README.md
+
+External links (http/https/mailto) are not fetched. Fenced code blocks
+and inline code spans are stripped before matching, so ASCII diagrams
+and code samples cannot produce false links.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Iterable, List, Tuple
+
+LINK_RE = re.compile(r"\[([^\]]*)\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"^(```|~~~)")
+INLINE_CODE_RE = re.compile(r"`[^`]*`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def md_files(paths: Iterable[str]) -> List[str]:
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                out.extend(
+                    os.path.join(root, n)
+                    for n in sorted(names) if n.endswith(".md")
+                )
+        else:
+            out.append(p)
+    return out
+
+
+def strip_code(lines: List[str]) -> List[str]:
+    """Blank out fenced blocks and inline code spans."""
+    out, fenced = [], False
+    for ln in lines:
+        if FENCE_RE.match(ln.strip()):
+            fenced = not fenced
+            out.append("")
+            continue
+        out.append("" if fenced else INLINE_CODE_RE.sub("", ln))
+    return out
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (approximate, ASCII-focused)."""
+    h = INLINE_CODE_RE.sub(lambda m: m.group(0).strip("`"), heading)
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)  # unwrap links
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\s-]", "", h)
+    return re.sub(r"[\s]+", "-", h)
+
+
+def headings_of(path: str) -> List[str]:
+    slugs = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+    except OSError:
+        return slugs
+    fenced = False
+    for ln in lines:
+        if FENCE_RE.match(ln.strip()):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        m = HEADING_RE.match(ln)
+        if m:
+            slugs.append(slugify(m.group(1)))
+    return slugs
+
+
+def check_file(path: str) -> Tuple[List[Tuple[int, str, str]], int]:
+    """((line, target, problem) per broken link, total links) for
+    ``path``."""
+    problems, nlinks = [], 0
+    with open(path, encoding="utf-8") as f:
+        lines = strip_code(f.read().splitlines())
+    base = os.path.dirname(os.path.abspath(path))
+    for i, ln in enumerate(lines, 1):
+        for m in LINK_RE.finditer(ln):
+            nlinks += 1
+            target = m.group(2)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # scheme: skip
+                continue
+            fpart, _, anchor = target.partition("#")
+            if not fpart:  # same-file anchor
+                tgt_path = os.path.abspath(path)
+            else:
+                tgt_path = os.path.normpath(os.path.join(base, fpart))
+                if not os.path.exists(tgt_path):
+                    problems.append((i, target, "missing file"))
+                    continue
+            if anchor and tgt_path.endswith(".md"):
+                if slugify(anchor) not in headings_of(tgt_path):
+                    problems.append((i, target, "missing anchor"))
+    return problems, nlinks
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    files = md_files(argv)
+    total_links, bad = 0, 0
+    for path in files:
+        probs, nlinks = check_file(path)
+        total_links += nlinks
+        for line, target, why in probs:
+            print(f"{path}:{line}: {why}: {target}", file=sys.stderr)
+            bad += 1
+    print(f"checked {len(files)} files, {total_links} links, "
+          f"{bad} broken")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

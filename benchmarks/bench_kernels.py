@@ -139,17 +139,82 @@ def _legacy_dequant_matmul(x2d, mo):
     ).astype(x2d.dtype)
 
 
-def _bench_mixed_gemm(rows, rng, smoke: bool):
+def _nvfp4_friendly(rng, shape, span=9):
+    """Micro-structured data the sub4 cascade sends to NVFP4: E2M1-grid
+    magnitudes under per-16-element group scales (see docs/numerics.md
+    -- NVFP4 wins exactly where one per-block E4M3 scale underflows)."""
+    r, k = shape
+    grid = np.array([0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0])
+    vals = grid[rng.integers(0, len(grid), (r, k))]
+    signs = np.where(rng.standard_normal((r, k)) > 0, 1.0, -1.0)
+    gs = np.exp2(rng.integers(-span, span + 1, (r, k // 16))).repeat(
+        16, axis=1
+    )
+    return jnp.asarray(signs * vals * gs, jnp.bfloat16)
+
+
+def _bench_nvfp4_gemm(rows, rng, smoke: bool):
+    """The sub4 (NVFP4) serving lane: a fully-NVFP4 weight's packed
+    4-bit payload through the mixed GEMM vs the legacy dequant+matmul,
+    with the bytes/element of the pack and the fused launch count --
+    the ``kernel/gemm_nvfp4_*`` rows the v2 schema contract names."""
+    M, N, K = (256, 512, 512) if smoke else (512, 1024, 1024)
+    pol = MoRPolicy(recipe="sub4", partition="block", backend="xla")
+    w = _nvfp4_friendly(rng, (N, K))
+    mo, stats = quantize_for_gemm(w, pol)
+    mo = mo.compact()
+    bpe = sum(
+        l.size * l.dtype.itemsize
+        for l in (mo.payload_q, mo.payload_bf16, mo.payload_nib,
+                  mo.micro_scales, mo.tags, mo.scales)
+    ) / (N * K)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
+    bk = mo.block[1]
+
+    def legacy(a, m=mo):
+        return _legacy_dequant_matmul(a, m)
+
+    def fused_xla(a, m=mo, bk=bk):
+        return mixed_gemm(passthrough_mixed(a, (bk, bk)), m,
+                          backend="xla")
+
+    def fused_pallas(a, m=mo, bk=bk):
+        return mixed_gemm(passthrough_mixed(a, (bk, bk)), m,
+                          backend="pallas")
+
+    iters = 3 if smoke else 10
+    us_l = _time(jax.jit(legacy), x, iters=iters)
+    us_f = _time(jax.jit(fused_xla), x, iters=iters)
+    try:
+        launches = _tpu_kernel_launches(fused_pallas, x)
+    except Exception:  # older jax without cross-platform lowering
+        launches = -1
+    tag = f"{M}x{N}x{K}"
+    rows.append(csv_row(
+        f"kernel/gemm_nvfp4_xla_{tag}", us_f,
+        f"frac_nvfp4={float(stats[8]):.2f};"
+        f"weight_bytes_per_elt={bpe:.3f};"
+        f"us_legacy_dequant={us_l:.1f}",
+    ))
+    rows.append(csv_row(
+        f"kernel/gemm_nvfp4_pallas_{tag}", 0.0,
+        f"tpu_kernel_launches={launches};"
+        f"weight_bytes_per_elt={bpe:.3f}",
+    ))
+
+
+def _bench_mixed_gemm(rows, rng, smoke: bool, recipe: str = "sub3"):
     """Mixed-representation GEMM vs legacy dequantize-then-matmul:
     wall time + HLO bytes + operand-pass counts (xla lowerings) and
     fused-kernel launch counts (TPU cross-lowering)."""
     sizes = ((512, 512, 512),) if smoke else (
         (512, 512, 512), (1024, 1024, 1024)
     )
-    pol = MoRPolicy(recipe="sub3", partition="block", backend="xla")
+    pol = MoRPolicy(recipe=recipe, partition="block", backend="xla")
     for M, N, K in sizes:
         x = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
-        w = jnp.asarray(rng.standard_normal((N, K)), jnp.bfloat16)
+        w = (_nvfp4_friendly(rng, (N, K)) if recipe == "sub4"
+             else jnp.asarray(rng.standard_normal((N, K)), jnp.bfloat16))
         mo, _ = quantize_for_gemm(w, pol)
         bk = mo.block[1]
 
@@ -336,7 +401,7 @@ def _bench_sharded(rows, smoke: bool):
 
 
 def main(smoke: bool = False, sharded: bool = True,
-         sharded_only: bool = False):
+         sharded_only: bool = False, recipe: str = "sub3"):
     rows = []
     rng = np.random.default_rng(0)
 
@@ -344,7 +409,11 @@ def main(smoke: bool = False, sharded: bool = True,
         return _sharded_rows(smoke), None
 
     # Mixed-representation block GEMM vs legacy dequant+matmul.
-    _bench_mixed_gemm(rows, rng, smoke)
+    _bench_mixed_gemm(rows, rng, smoke, recipe=recipe)
+
+    # NVFP4 packed-payload serving lane (the v2 schema's gemm_nvfp4
+    # rows ride in every artifact, whatever the main-lane recipe).
+    _bench_nvfp4_gemm(rows, rng, smoke)
 
     # Fused mor_quantize (the XLA lowering used in train steps).
     quant_sizes = ((1024, 1024),) if smoke else ((1024, 1024), (4096, 1024))
@@ -447,11 +516,16 @@ if __name__ == "__main__":
     ap.add_argument("--sharded-child", action="store_true",
                     help="internal: run only the sharded lane "
                          "(spawned with forced host devices)")
+    ap.add_argument("--recipe", default="sub3",
+                    choices=("sub2", "sub3", "sub4"),
+                    help="MoR recipe for the mixed-GEMM lane "
+                         "(sub4 = NVFP4 four-way)")
     args = ap.parse_args()
     out_rows = main(
         smoke=args.smoke,
         sharded=not args.no_sharded,
         sharded_only=args.sharded_child,
+        recipe=args.recipe,
     )[0]
     for row in out_rows:
         print(row)

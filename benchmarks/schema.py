@@ -7,16 +7,22 @@ slow lane runs ``python -m benchmarks.schema bench_kernels.json`` after
 the bench smoke, so a drifting producer fails the build instead of
 silently breaking downstream consumers.
 
-Schema ``repro.bench_kernels/v1``::
+Schema ``repro.bench_kernels/v2`` (current; the validator also accepts
+``v1`` artifacts so stored history keeps validating)::
 
     {
-      "schema": "repro.bench_kernels/v1",
+      "schema": "repro.bench_kernels/v2",
       "rows": [
         {"name": "kernel/<lane>_<variant>[_<size>]",   # row id
          "us":   12.3,                                  # mean wall us/call
          "derived": "key=value;key2=value2"}            # lane metrics
       ]
     }
+
+v2 extends v1 only by contract, not by shape: producers must emit at
+least one ``kernel/gemm_nvfp4_*`` row when the bench runs the sub4
+(NVFP4) recipe lane (``--recipe sub4`` or the default full matrix),
+and the version string bumps. Row grammar is unchanged:
 
 * ``name`` matches ``^kernel/[A-Za-z0-9._-]+$`` and is unique per
   artifact.
@@ -36,10 +42,16 @@ import re
 import sys
 from typing import Any, Dict, List
 
-SCHEMA = "repro.bench_kernels/v1"
+SCHEMA_V1 = "repro.bench_kernels/v1"
+SCHEMA_V2 = "repro.bench_kernels/v2"
+SCHEMA = SCHEMA_V2
+ACCEPTED_SCHEMAS = (SCHEMA_V1, SCHEMA_V2)
 _NAME_RE = re.compile(r"^kernel/[A-Za-z0-9._-]+$")
 
-__all__ = ["SCHEMA", "make_artifact", "validate_artifact", "rows_from_csv"]
+__all__ = [
+    "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "ACCEPTED_SCHEMAS",
+    "make_artifact", "validate_artifact", "rows_from_csv",
+]
 
 
 def rows_from_csv(csv_rows: List[str]) -> List[Dict[str, Any]]:
@@ -57,15 +69,17 @@ def make_artifact(csv_rows: List[str]) -> Dict[str, Any]:
 
 
 def validate_artifact(doc: Any) -> None:
-    """Raise ValueError unless ``doc`` conforms to SCHEMA."""
+    """Raise ValueError unless ``doc`` conforms to an accepted schema
+    version (v1 or v2 -- the row grammar is shared)."""
     if not isinstance(doc, dict):
         raise ValueError(f"artifact must be an object, got {type(doc)}")
     extra = set(doc) - {"schema", "rows"}
     if extra:
         raise ValueError(f"unknown top-level keys: {sorted(extra)}")
-    if doc.get("schema") != SCHEMA:
+    if doc.get("schema") not in ACCEPTED_SCHEMAS:
         raise ValueError(
-            f"schema mismatch: {doc.get('schema')!r} != {SCHEMA!r}"
+            f"schema mismatch: {doc.get('schema')!r} not in "
+            f"{ACCEPTED_SCHEMAS!r}"
         )
     rows = doc.get("rows")
     if not isinstance(rows, list) or not rows:
@@ -117,7 +131,10 @@ def main(argv: List[str]) -> int:
     except ValueError as e:
         print(f"SCHEMA INVALID: {e}", file=sys.stderr)
         return 1
-    print(f"schema OK: {argv[0]} ({len(doc['rows'])} rows, {SCHEMA})")
+    print(
+        f"schema OK: {argv[0]} ({len(doc['rows'])} rows, "
+        f"{doc['schema']})"
+    )
     return 0
 
 

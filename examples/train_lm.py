@@ -56,7 +56,7 @@ def main():
     ap.add_argument("--preset", default="tiny", choices=PRESETS)
     ap.add_argument("--policy", default="mor_block",
                     choices=["bf16", "mor_block", "mor_tensor",
-                             "mor_channel", "sub2", "sub3"])
+                             "mor_channel", "sub2", "sub3", "sub4"])
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--lr", type=float, default=3e-3)

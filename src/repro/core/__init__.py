@@ -1,5 +1,15 @@
 """MoR core: GAM scaling (Alg. 1) + Mixture-of-Representations (Alg. 2)."""
-from .formats import BF16, E4M3, E5M2, FORMATS, FormatSpec, cast_to_format
+from .formats import (
+    BF16,
+    E4M3,
+    E5M2,
+    FORMATS,
+    NVFP4,
+    NVFP4_MICRO,
+    FormatSpec,
+    cast_to_format,
+    cast_to_nvfp4,
+)
 from .gam import GamScales, compute_scales, split_mantissa_exponent
 from .linear import N_BWD_EVENTS, N_FWD_EVENTS, mor_dot, new_token
 from .metrics import (
@@ -28,6 +38,7 @@ from .policy import (
     BF16_BASELINE,
     SUBTENSOR2_MOR,
     SUBTENSOR3_MOR,
+    SUBTENSOR4_MOR,
     TENSOR_MOR,
     MoRDotPolicy,
     MoRPolicy,
@@ -37,7 +48,8 @@ from .policy import (
 from .stats import MoRStatsTracker, RelErrHistogram
 
 __all__ = [
-    "BF16", "E4M3", "E5M2", "FORMATS", "FormatSpec", "cast_to_format",
+    "BF16", "E4M3", "E5M2", "FORMATS", "NVFP4", "NVFP4_MICRO",
+    "FormatSpec", "cast_to_format", "cast_to_nvfp4",
     "GamScales", "compute_scales", "split_mantissa_exponent",
     "N_BWD_EVENTS", "N_FWD_EVENTS", "mor_dot", "new_token",
     "block_dynamic_range_ok", "block_relative_error_sums", "relative_error",
@@ -45,8 +57,9 @@ __all__ = [
     "quantize_for_gemm",
     "PER_BLOCK_64", "PER_BLOCK_128", "PER_CHANNEL", "PER_TENSOR",
     "SUB_CHANNEL_128", "Partition", "block_amax",
-    "BF16_BASELINE", "SUBTENSOR2_MOR", "SUBTENSOR3_MOR", "TENSOR_MOR",
-    "MoRDotPolicy", "MoRPolicy", "paper_default", "with_mesh_axes",
+    "BF16_BASELINE", "SUBTENSOR2_MOR", "SUBTENSOR3_MOR", "SUBTENSOR4_MOR",
+    "TENSOR_MOR", "MoRDotPolicy", "MoRPolicy", "paper_default",
+    "with_mesh_axes",
     "compat_shard_map", "pmax_over", "psum_over",
     "MoRStatsTracker", "RelErrHistogram",
 ]

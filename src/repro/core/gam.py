@@ -118,7 +118,12 @@ def scales_from_bmax(
     m_b, e_b = split_mantissa_exponent(s_b)
     if algo == "e8m0":
         # Round scale down to a pure power of two -> saturation-free.
-        e_b = jnp.clip(e_b, -126, 126)
+        # Clamp matches exp2i's full [-126, 127] domain: clipping at 126
+        # (the old off-by-one) halved the scale of tiny-amax blocks a
+        # second time for no reason (the "double rounding" bug) --
+        # 2^127 is exactly representable and m_g * 2^127 <= f32max
+        # since m_g <= 2 - 2^-23.
+        e_b = jnp.clip(e_b, -126, 127)
         scale = exp2i(e_b)
         return GamScales(
             scale=scale,
@@ -135,7 +140,7 @@ def scales_from_bmax(
     # exceeds this block's ideal mantissa, m_g * 2^{e_b} > s_b would map
     # block_amax above q_amax; drop the exponent by one.
     e_b = jnp.where(m_g <= m_b, e_b, e_b - 1)
-    e_b = jnp.clip(e_b, -126, 126)
+    e_b = jnp.clip(e_b, -126, 127)  # exp2i's full domain (see e8m0 note)
     scale = m_g * exp2i(e_b)
     return GamScales(
         scale=scale.astype(jnp.float32),

@@ -91,7 +91,7 @@ def mor_dot(x, w, token, policy: MoRDotPolicy):
     >>> w = jnp.ones((128, 32), jnp.bfloat16)
     >>> y, fwd_stats = mor_dot(x, w, new_token(), SUBTENSOR3_MOR)
     >>> y.shape, fwd_stats.shape       # one stats row per fwd event
-    ((4, 32), (2, 8))
+    ((4, 32), (2, 10))
     >>> float(y[0, 0])                 # ones @ ones, exact under fp8
     128.0
 
@@ -195,8 +195,13 @@ def _transpose_invariant(p) -> bool:
     Holds exactly for per-tensor scaling and square per-block scaling
     (block amaxes/scales are permutation-invariant under block transpose);
     per-channel / sub-channel scaling is direction-dependent (paper §3.1),
-    so those must re-quantize the transposes.
+    so those must re-quantize the transposes. NVFP4 (sub4) is likewise
+    direction-dependent: its 1x16 micro-blocks and row-paired nibble
+    packing follow the contraction axis, so sub4 events always
+    re-quantize (and re-pack) the transposed views.
     """
+    if p.recipe == "sub4":
+        return False
     if p.partition == "tensor":
         return True
     if p.partition == "block" and p.block_shape[0] == p.block_shape[1]:

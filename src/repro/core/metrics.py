@@ -15,10 +15,23 @@ __all__ = [
     "block_relative_error_sums",
     "block_dynamic_range_ok",
     "E5M2_RANGE_RATIO",
+    "NVFP4_RANGE_RATIO",
 ]
 
 # Eq. 4: max-representable(E5M2) / min-normal(E5M2) = 57344 / 2^-14.
 E5M2_RANGE_RATIO = 57344.0 / 2.0**-14
+
+# Eq. 4 analog for the NVFP4 candidate of the sub4 recipe, tuned to
+# the *two-level* structure: the gated quantity is the block amax over
+# the smallest non-zero micro-group amax (not the element minimum --
+# intra-group fidelity is what the Eq. 3 error sums already measure,
+# and E2M1's 4-binade payload only ever sees one micro group). A block
+# is NVFP4-representable iff every micro-group's scale fits E4M3's
+# finite span (448 / 2^-9) with E2M1's subnormal headroom (6 / 0.5)
+# on top; past this ratio micro scales flush and the block degrades
+# the way out-of-range E5M2 does in the paper's Eq. 4, so it falls
+# through to the fp8 cascade. docs/numerics.md#nvfp4 derives this.
+NVFP4_RANGE_RATIO = (6.0 / 0.5) * (448.0 / 2.0**-9)
 
 
 def relative_error(x: jnp.ndarray, xq: jnp.ndarray) -> jnp.ndarray:

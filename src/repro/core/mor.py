@@ -21,16 +21,29 @@ points) the group amax behind the Alg. 1 mantissa -- are allreduced
 over the named axes, so per-block decisions are bit-identical to the
 single-device run. See docs/sharding.md.
 
-Stats vector layout (f32, STATS_WIDTH):
+Stats vector layout v2 (f32, STATS_WIDTH = 10):
   [0] decision        1.0 if the preferred low-precision type was accepted
-                      (tensor-level), or fraction of blocks in E4M3 (sub-*).
+                      (tensor-level), the fraction of blocks in the
+                      recipe's preferred format (sub-*: E4M3 for
+                      sub2/sub3, NVFP4 for sub4), or -1.0 for a
+                      *disabled* ('off') event -- the sentinel
+                      aggregation consumers filter on so passthrough
+                      rows cannot dilute the enabled-event fractions.
   [1] rel_err         global mean relative error of the E4M3 candidate.
   [2] amax            group (tensor) absolute maximum.
   [3] frac_e4m3       fraction of blocks quantized to E4M3.
-  [4] frac_e5m2       fraction of blocks quantized to E5M2 (sub3 only).
+  [4] frac_e5m2       fraction of blocks quantized to E5M2 (sub3/sub4).
   [5] frac_bf16       fraction of blocks left in BF16.
   [6] nonzero_frac    fraction of non-zero elements.
   [7] group_mantissa  m_g of the GAM scale.
+  [8] frac_nvfp4      fraction of blocks quantized to NVFP4 (sub4 only).
+  [9] micro_scale_bpe extra bytes/element spent on NVFP4 micro scales
+                      over the whole operand (= frac_nvfp4 / 16: one
+                      E4M3 byte per 16 elements of each NVFP4 block).
+
+v1 (width 8, PRs 1-3) is layout v2 without [8]/[9] and with 0.0 instead
+of the -1.0 disabled sentinel; every consumer keys on STATS_WIDTH
+(tests/test_stats_contract.py guards the migration).
 """
 from __future__ import annotations
 
@@ -49,7 +62,7 @@ from .policy import MoRPolicy
 # partition, all loaded above).
 from repro.kernels import ops as kops
 from repro.kernels import ref as _kref
-from repro.kernels.ref import TAG_BF16, TAG_E4M3, MixedOperand
+from repro.kernels.ref import TAG_BF16, TAG_E4M3, TAG_NVFP4, MixedOperand
 
 __all__ = [
     "STATS_WIDTH",
@@ -60,12 +73,17 @@ __all__ = [
     "partition_of",
 ]
 
-STATS_WIDTH = 8
+STATS_WIDTH = 10
 
 
 def partition_of(policy: MoRPolicy) -> Partition:
+    # sub4 blocks must pair rows (nibble packing) and 16-divide the
+    # contraction axis (micro scales); align rounds small-operand
+    # blocks up instead of shrinking them to odd shapes.
+    align = (2, 16) if policy.recipe == "sub4" else (1, 1)
     return Partition(
-        kind=policy.partition, block_shape=policy.block_shape, sub=policy.sub
+        kind=policy.partition, block_shape=policy.block_shape,
+        sub=policy.sub, align=align,
     )
 
 
@@ -88,7 +106,8 @@ def quant_dequant(
 
 
 def _stats(
-    decision, rel_err, amax, f_e4, f_e5, f_bf, nz_frac, m_g
+    decision, rel_err, amax, f_e4, f_e5, f_bf, nz_frac, m_g,
+    f_nv=0.0, micro_bpe=0.0,
 ) -> jnp.ndarray:
     return jnp.stack(
         [
@@ -100,6 +119,8 @@ def _stats(
             jnp.float32(f_bf),
             jnp.float32(nz_frac),
             jnp.float32(m_g),
+            jnp.float32(f_nv),
+            jnp.float32(micro_bpe),
         ]
     )
 
@@ -137,12 +158,12 @@ def _tensor_level(x2d: jnp.ndarray, policy: MoRPolicy):
 
 
 def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
-    """Sub-tensor MoR (paper §3.2): two-way or three-way per-block choice.
+    """Sub-tensor MoR (§3.2 + sub4): two/three/four-way per-block choice.
 
-    The whole per-block pipeline -- both fp8 candidates, the Eq. 3 error
-    comparison and (sub3) the Eq. 4 dynamic-range gate -- runs in one
-    fused pass per block (`kops.mor_select`); only the stats aggregation
-    lives here.
+    The whole per-block pipeline -- the fp8 (and sub4: NVFP4)
+    candidates, the Eq. 3 error comparisons and the Eq. 4 dynamic-range
+    gates -- runs in one fused pass per block (`kops.mor_select`); only
+    the stats aggregation lives here.
     """
     axes = policy.mesh_axes
     part = partition_of(policy)
@@ -168,9 +189,22 @@ def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
     f5 = psum_over(
         jnp.sum((r.sel == 1).astype(jnp.float32)), axes
     ) / nblocks
+    if policy.recipe == "sub3":
+        stats = _stats(
+            f4, global_e4_err, r.group_amax, f4, f5, 1.0 - f4 - f5, nz,
+            r.group_mantissa,
+        )
+        return r.y, stats, r.sel
+
+    # sub4: the preferred format is NVFP4; decision = frac_nvfp4 and the
+    # micro-scale byte overhead rides in the new stats lane.
+    f_nv = psum_over(
+        jnp.sum((r.sel == TAG_NVFP4).astype(jnp.float32)), axes
+    ) / nblocks
     stats = _stats(
-        f4, global_e4_err, r.group_amax, f4, f5, 1.0 - f4 - f5, nz,
-        r.group_mantissa,
+        f_nv, global_e4_err, r.group_amax, f4, f5,
+        1.0 - f4 - f5 - f_nv, nz, r.group_mantissa,
+        f_nv, f_nv / _kref.NVFP4_MICRO,
     )
     return r.y, stats, r.sel
 
@@ -198,7 +232,12 @@ def _off_stats(x2d: jnp.ndarray, mesh_axes=()) -> jnp.ndarray:
     amax = pmax_over(
         jnp.max(jnp.abs(x2d.astype(jnp.float32))), mesh_axes
     )
-    return _stats(0.0, 0.0, amax, 0.0, 0.0, 1.0, nz, 1.0)
+    # decision = -1.0: the disabled-event sentinel. A recipe='off' row
+    # still reports frac_bf16 = 1.0 (it *is* BF16), but aggregation
+    # consumers (summarize_mor_stats, MoRStatsTracker) must skip it or
+    # passthrough events drag fwd_frac_bf16 toward 1 even when every
+    # enabled event quantized.
+    return _stats(-1.0, 0.0, amax, 0.0, 0.0, 1.0, nz, 1.0)
 
 
 def _decide(x2d: jnp.ndarray, policy: MoRPolicy):
@@ -211,7 +250,7 @@ def _decide(x2d: jnp.ndarray, policy: MoRPolicy):
     """
     if policy.recipe == "tensor":
         return _tensor_level(x2d, policy)
-    if policy.recipe in ("sub2", "sub3"):
+    if policy.recipe in ("sub2", "sub3", "sub4"):
         return _sub_tensor(x2d, policy)
     if policy.recipe == "e4m3":
         return _static_e4m3(x2d, policy)
@@ -241,7 +280,7 @@ def mor_quantize(
     >>> y.shape == x.shape and y.dtype == x.dtype
     True
     >>> stats.shape            # the STATS_WIDTH vector
-    (8,)
+    (10,)
     >>> float(stats[5])        # all-ones quantizes exactly: no BF16 blocks
     0.0
     """
@@ -300,12 +339,20 @@ def quantize_for_gemm(
             "do not tile a block GEMM -- use the fake-quant path"
         )
     part = partition_of(policy)
+    block = part.resolve(x2d.shape)
+    if policy.recipe == "sub4" and not _kref.nvfp4_block_capable(block):
+        raise ValueError(
+            f"sub4 packing needs an even-row, 16-divisible-column "
+            f"block; policy block_shape {policy.block_shape} resolved "
+            f"to {block} for operand {tuple(x2d.shape)}"
+        )
     _, stats, tags = _decide(x2d, policy)
     # stats[2] is the group amax the decision path used -- already
     # allreduced under mesh_axes -- so the pack's Alg. 1 scales can
     # never disagree with the decisions in `tags`.
     mo = _kref.pack_mixed(
-        x2d, tags, part.resolve(x2d.shape), policy.algo,
+        x2d, tags, block, policy.algo,
         group_amax=stats[2],
+        with_nvfp4=(policy.recipe == "sub4"),
     )
     return mo, stats

@@ -42,6 +42,13 @@ class Partition:
     kind: str  # 'tensor' | 'block' | 'channel' | 'subchannel'
     block_shape: Tuple[int, int] = (128, 128)
     sub: int = 128
+    # Alignment the resolved block dims are rounded *up* to (after the
+    # shrink-to-operand min). (1, 1) = legacy behaviour. The sub4
+    # recipe uses (2, 16): NVFP4 nibble packing pairs rows and the
+    # micro-block scales group 16 contraction elements, so blocks of a
+    # small operand must stay 2x16-divisible (zero padding is invisible
+    # to every consumer, as with normal block padding).
+    align: Tuple[int, int] = (1, 1)
 
     def resolve(self, shape: Tuple[int, int]) -> Tuple[int, int]:
         """Concrete (bm, bk) block dims for a 2-D operand ``shape``."""
@@ -50,7 +57,11 @@ class Partition:
             return (m, k)
         if self.kind == "block":
             bm, bk = self.block_shape
-            return (min(bm, m), min(bk, k))
+            am, ak = self.align
+            return (
+                min(bm, -(-m // am) * am),
+                min(bk, -(-k // ak) * ak),
+            )
         if self.kind == "channel":
             return (1, k)
         if self.kind == "subchannel":

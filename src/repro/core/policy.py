@@ -16,8 +16,8 @@ import dataclasses
 from typing import Optional, Tuple
 
 __all__ = ["MoRPolicy", "MoRDotPolicy", "TENSOR_MOR", "SUBTENSOR2_MOR",
-           "SUBTENSOR3_MOR", "BF16_BASELINE", "paper_default",
-           "with_mesh_axes"]
+           "SUBTENSOR3_MOR", "SUBTENSOR4_MOR", "BF16_BASELINE",
+           "paper_default", "with_mesh_axes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,6 +29,14 @@ class MoRPolicy:
       'tensor'   -- tensor-level MoR [E4M3, BF16] with threshold (Eq. 2).
       'sub2'     -- sub-tensor two-way  [E4M3, BF16]        (Eq. 3 gate).
       'sub3'     -- sub-tensor three-way [E4M3, E5M2, BF16] (Eq. 3 + Eq. 4).
+      'sub4'     -- sub-tensor four-way [NVFP4, E4M3, E5M2, BF16]: the
+                    paper's §5 NVFP4 outlook. A block takes the packed
+                    4-bit E2M1 payload (per-16-element E4M3 micro
+                    scales, two-level with the GAM block scale) when it
+                    beats the E4M3 benchmark on Eq. 3 *and* passes the
+                    NVFP4 dynamic-range gate; otherwise it falls
+                    through the sub3 cascade. Blocks align to (2, 16)
+                    (docs/numerics.md#nvfp4).
       'e4m3'     -- always-quantize static recipe (no dynamic decision);
                     useful as the non-MoR FP8 baseline.
     partition: 'tensor' | 'block' | 'channel' | 'subchannel'
@@ -151,6 +159,7 @@ def with_mesh_axes(
 TENSOR_MOR = paper_default("tensor")
 SUBTENSOR2_MOR = paper_default("sub2")
 SUBTENSOR3_MOR = paper_default("sub3")
+SUBTENSOR4_MOR = paper_default("sub4")
 BF16_BASELINE = MoRDotPolicy(
     act=MoRPolicy(recipe="off"),
     weight=MoRPolicy(recipe="off"),

@@ -68,6 +68,13 @@ class MoRStatsTracker:
             arr = np.asarray(vec, dtype=np.float64)
             rows = arr.reshape(-1, arr.shape[-1])
             for i, row in enumerate(rows):
+                if row[0] < 0:
+                    # decision == -1: disabled-policy (recipe 'off')
+                    # event -- its frac_bf16 = 1.0 is definitional, not
+                    # a fallback decision; counting it would drag the
+                    # fallback percentage toward 100% on partially
+                    # quantized models.
+                    continue
                 key = f"{name}[{i}]" if rows.shape[0] > 1 else name
                 self.hists.setdefault(key, RelErrHistogram()).add(float(row[1]))
                 self.total_events += 1

@@ -41,7 +41,9 @@ def _split_me(s):
 
 
 def _exp2i(e):
-    e = jnp.clip(e, -126, 126)
+    # Full E8M0 domain [-126, 127], matching core.gam (the 126 clamp
+    # was the double-rounding bug on tiny-amax blocks).
+    e = jnp.clip(e, -126, 127)
     return jax.lax.bitcast_convert_type(
         (e + 127) << 23, jnp.float32
     )

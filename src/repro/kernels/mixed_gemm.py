@@ -7,26 +7,35 @@ and GAM scale -- the per-block decisions of the fused ``mor_select``
 kernel finally reach the matmul instead of being erased by a
 dequantize-then-bf16-GEMM round trip.
 
-Dual-buffer payload layout (see ``kernels/README.md``):
+Tri-lane payload layout (see ``kernels/README.md``):
 
-  * ``payload_q``   (R, K) uint8  -- raw fp8 bits. E4M3 bit patterns for
+  * ``payload_q``   (R, K) uint8   -- raw fp8 bits. E4M3 bit patterns for
     tag 0 blocks, E5M2 bit patterns for tag 1 blocks, zero (don't-care)
-    for tag 2 blocks. One byte per element regardless of which fp8
+    for other tags. One byte per element regardless of which fp8
     format the block chose, so the buffer is a single dense array.
-  * ``payload_bf16``(R, K) bf16   -- original values for tag 2 (BF16
+  * ``payload_bf16``(R, K) bf16    -- original values for tag 2 (BF16
     passthrough) blocks, zero (don't-care) elsewhere.
+  * ``payload_nib`` (R/2, K) uint8 -- packed E2M1 nibbles for tag 3
+    (NVFP4) blocks: within block (i, j), byte row r carries logical row
+    r in its low nibble and row r + br/2 in its high nibble (row-halves
+    packing -- decode is two vector nibble extracts + one sublane
+    concat, no lane interleave).
+  * ``micro_scales``(R, K/16) uint8 -- E4M3 bits of the NVFP4
+    per-16-element micro scales.
 
 Per (bm, bk) block the kernel bitcasts the uint8 payload to *both* fp8
-dtypes, selects by tag, divides by the block's reconstructed GAM scale,
-rounds to the stored dtype (Fig. 4: stored values are BF16 -- this makes
-the fused GEMM consume exactly the fake-quantization values of the
-training path), and upcasts to f32 for the MXU. Accumulation is f32 in a
-VMEM scratch tile over the K grid dimension (innermost, 'arbitrary').
+dtypes, decodes the E2M1 nibbles arithmetically and expands the micro
+scales with an exact one-hot f32 matmul, selects by tag, divides by the
+block's reconstructed GAM scale, rounds to the stored dtype (Fig. 4:
+stored values are BF16 -- this makes the fused GEMM consume exactly the
+fake-quantization values of the training path), and upcasts to f32 for
+the MXU. Accumulation is f32 in a VMEM scratch tile over the K grid
+dimension (innermost, 'arbitrary').
 
-Tags (0 = E4M3, 1 = E5M2, 2 = BF16) and scales are (nr, nk) arrays that
-live whole in SMEM; each grid step reads its own two cells. Selection by
-tag is a vectorized ``where`` over in-register candidates -- no
-divergent control flow, which Mosaic would reject anyway.
+Tags (0 = E4M3, 1 = E5M2, 2 = BF16, 3 = NVFP4) and scales are (nr, nk)
+arrays that live whole in SMEM; each grid step reads its own two cells.
+Selection by tag is a vectorized ``where`` over in-register candidates
+-- no divergent control flow, which Mosaic would reject anyway.
 
 Grid: (R_a/bm, R_b/bn, K/bk).
 """
@@ -40,7 +49,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .ref import TAG_BF16, TAG_E5M2
+from repro.core.formats import NVFP4_MICRO, decode_e2m1
+
+from .ref import (
+    TAG_BF16,
+    TAG_E5M2,
+    TAG_NVFP4,
+    _ms_compact_shape,
+    _nib_compact_shape,
+    expand_micro_onehot,
+    nvfp4_block_capable,
+)
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(
@@ -50,8 +69,9 @@ _CompilerParams = getattr(
 __all__ = ["mixed_gemm_blocks"]
 
 
-def _decode(q_ref, bf_ref, tag, scale):
-    """One block: uint8 payload + bf16 buffer -> f32 stored values."""
+def _decode(q_ref, bf_ref, nib_ref, ms_ref, tag, scale, has_nv: bool,
+            g0=0):
+    """One block: payload lanes -> f32 stored values."""
     q4 = jax.lax.bitcast_convert_type(
         q_ref[...], jnp.float8_e4m3fn
     ).astype(jnp.float32)
@@ -62,20 +82,40 @@ def _decode(q_ref, bf_ref, tag, scale):
     # rounded to the storage dtype before entering the matmul, exactly
     # like the fake-quantization path.
     f8 = (jnp.where(tag == TAG_E5M2, q5, q4) / scale).astype(bf_ref.dtype)
-    return jnp.where(tag == TAG_BF16, bf_ref[...], f8).astype(jnp.float32)
+    out = jnp.where(tag == TAG_BF16, bf_ref[...], f8)
+    if has_nv:
+        # Unpack row-halved E2M1 nibbles, expand micro scales, apply
+        # the two-level dequant -- same op order as ref.decode_mixed_ref
+        # so interpret/xla stay bit-exact.
+        n32 = nib_ref[...].astype(jnp.int32)
+        lo = decode_e2m1(n32 & 15)
+        hi = decode_e2m1(n32 >> 4)
+        vals = jnp.concatenate([lo, hi], axis=0)  # (br, bk)
+        d = jax.lax.bitcast_convert_type(
+            ms_ref[...], jnp.float8_e4m3fn
+        ).astype(jnp.float32)
+        d_exp = expand_micro_onehot(d, vals.shape[-1], g0)
+        nv = ((vals * d_exp) / scale).astype(bf_ref.dtype)
+        out = jnp.where(tag == TAG_NVFP4, nv, out)
+    return out.astype(jnp.float32)
 
 
 def _kernel(a_tag_ref, a_sc_ref, b_tag_ref, b_sc_ref,
-            a_q_ref, a_bf_ref, b_q_ref, b_bf_ref, o_ref, acc_ref,
-            *, n_k: int):
+            a_q_ref, a_bf_ref, a_nib_ref, a_ms_ref,
+            b_q_ref, b_bf_ref, b_nib_ref, b_ms_ref, o_ref, acc_ref,
+            *, n_k: int, g16: int, a_has_nv: bool, b_has_nv: bool):
     i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(k == 0)
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    a = _decode(a_q_ref, a_bf_ref, a_tag_ref[i, k], a_sc_ref[i, k])
-    b = _decode(b_q_ref, b_bf_ref, b_tag_ref[j, k], b_sc_ref[j, k])
+    # Micro-scale stripes ride whole along the contraction axis; the
+    # one-hot expansion selects grid step k's group window.
+    a = _decode(a_q_ref, a_bf_ref, a_nib_ref, a_ms_ref,
+                a_tag_ref[i, k], a_sc_ref[i, k], a_has_nv, k * g16)
+    b = _decode(b_q_ref, b_bf_ref, b_nib_ref, b_ms_ref,
+                b_tag_ref[j, k], b_sc_ref[j, k], b_has_nv, k * g16)
     # A (bm, bk) contracted with B (bn, bk) on the K axis: C = A @ B^T.
     acc_ref[...] += jax.lax.dot_general(
         a, b, (((1,), (1,)), ((), ())),
@@ -93,10 +133,14 @@ def _kernel(a_tag_ref, a_sc_ref, b_tag_ref, b_sc_ref,
 def mixed_gemm_blocks(
     a_q: jnp.ndarray,
     a_bf: jnp.ndarray,
+    a_nib: jnp.ndarray,
+    a_ms: jnp.ndarray,
     a_tags: jnp.ndarray,
     a_scales: jnp.ndarray,
     b_q: jnp.ndarray,
     b_bf: jnp.ndarray,
+    b_nib: jnp.ndarray,
+    b_ms: jnp.ndarray,
     b_tags: jnp.ndarray,
     b_scales: jnp.ndarray,
     *,
@@ -104,13 +148,16 @@ def mixed_gemm_blocks(
     out_dtype=jnp.bfloat16,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """a: (M, K) dual-buffer payloads + (M/bm, K/bk) tags/scales;
-    b: (N, K) quantization view (contraction last) likewise.
+    """a: (M, K)/(M/2, K)/(M, K/16) tri-lane payloads + (M/bm, K/bk)
+    tags/scales; b: (N, K) quantization view (contraction last)
+    likewise.
 
-    Either payload buffer of an operand may be *compact* -- a single
-    don't-care (br, bk) block (see ``ref.MixedOperand.compact``) -- in
-    which case its BlockSpec pins index (0, 0): the block stays VMEM-
-    resident and contributes no per-step HBM traffic.
+    Any payload lane of an operand may be *compact* -- a single
+    don't-care block (see ``ref.MixedOperand.compact``) -- in which
+    case its BlockSpec pins index (0, 0): the block stays VMEM-resident
+    and contributes no per-step HBM traffic. The NVFP4 decode is
+    skipped entirely (statically) when an operand's block geometry
+    cannot hold NVFP4 or both sub-byte lanes are compact.
 
     Returns (M, N) = A @ B^T in out_dtype, f32-accumulated.
     """
@@ -120,17 +167,51 @@ def mixed_gemm_blocks(
     assert n_k == n_k2, (a_tags.shape, b_tags.shape)
     M, N, K = n_m * bm, n_n * bn, n_k * bk
 
-    def payload_spec(buf, br, idx):
-        if buf.shape == (br, bk):  # compact: one shared don't-care block
-            return pl.BlockSpec((br, bk), lambda i, j, k: (0, 0))
-        return pl.BlockSpec((br, bk), idx)
+    def payload_spec(buf, compact_shape, blk_shape, idx):
+        if buf.shape == compact_shape:  # compact: one shared block
+            return pl.BlockSpec(compact_shape, lambda i, j, k: (0, 0))
+        return pl.BlockSpec(blk_shape, idx)
 
     assert a_q.shape in ((M, K), (bm, bk)), (a_q.shape, (M, K), block)
     assert a_bf.shape in ((M, K), (bm, bk)), (a_bf.shape, (M, K), block)
     assert b_q.shape in ((N, K), (bn, bk)), (b_q.shape, (N, K), block)
     assert b_bf.shape in ((N, K), (bn, bk)), (b_bf.shape, (N, K), block)
 
-    kernel = functools.partial(_kernel, n_k=n_k)
+    def nib_spec(buf, br, idx):
+        return payload_spec(
+            buf, _nib_compact_shape((br, bk)), (br // 2, bk), idx
+        )
+
+    def ms_spec(buf, br, row_idx):
+        # Micro-scale stripes ride whole along the contraction axis:
+        # their (K/16) lane count is not 128-divisible, and TPU tiling
+        # only accepts a non-divisible lane dim when it equals the
+        # whole array's (the kernel windows the stripe per grid step).
+        if buf.shape == _ms_compact_shape((br, bk)):
+            return pl.BlockSpec(buf.shape, lambda i, j, k: (0, 0))
+        return pl.BlockSpec(
+            (br, buf.shape[-1]), lambda i, j, k: (row_idx(i, j, k), 0)
+        )
+
+    def has_nv(br, n_r, nib, ms):
+        # Decode the NVFP4 lanes when the operand carries full (dense)
+        # sub-byte buffers. For a single-block operand the full and
+        # compact shapes coincide -- decode then too (a truly compact
+        # don't-care lane has no TAG_NVFP4 to select it, so the extra
+        # work is dead but correct).
+        if not nvfp4_block_capable((br, bk)):
+            return False
+        full_nib = (n_r * (br // 2), n_k * bk)
+        full_ms = (n_r * br, n_k * bk // NVFP4_MICRO)
+        return nib.shape == full_nib or tuple(ms.shape) == full_ms
+
+    a_has_nv = has_nv(bm, n_m, a_nib, a_ms)
+    b_has_nv = has_nv(bn, n_n, b_nib, b_ms)
+
+    kernel = functools.partial(
+        _kernel, n_k=n_k, g16=bk // NVFP4_MICRO if a_has_nv or b_has_nv
+        else 0, a_has_nv=a_has_nv, b_has_nv=b_has_nv
+    )
     a_idx = lambda i, j, k: (i, k)  # noqa: E731
     b_idx = lambda i, j, k: (j, k)  # noqa: E731
     return pl.pallas_call(
@@ -141,10 +222,14 @@ def mixed_gemm_blocks(
             pl.BlockSpec(memory_space=pltpu.SMEM),  # a_scales (nm, nk)
             pl.BlockSpec(memory_space=pltpu.SMEM),  # b_tags (nn, nk)
             pl.BlockSpec(memory_space=pltpu.SMEM),  # b_scales (nn, nk)
-            payload_spec(a_q, bm, a_idx),
-            payload_spec(a_bf, bm, a_idx),
-            payload_spec(b_q, bn, b_idx),
-            payload_spec(b_bf, bn, b_idx),
+            payload_spec(a_q, (bm, bk), (bm, bk), a_idx),
+            payload_spec(a_bf, (bm, bk), (bm, bk), a_idx),
+            nib_spec(a_nib, bm, a_idx),
+            ms_spec(a_ms, bm, lambda i, j, k: i),
+            payload_spec(b_q, (bn, bk), (bn, bk), b_idx),
+            payload_spec(b_bf, (bn, bk), (bn, bk), b_idx),
+            nib_spec(b_nib, bn, b_idx),
+            ms_spec(b_ms, bn, lambda i, j, k: j),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
@@ -153,4 +238,5 @@ def mixed_gemm_blocks(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(a_tags, a_scales, b_tags, b_scales, a_q, a_bf, b_q, b_bf)
+    )(a_tags, a_scales, b_tags, b_scales,
+      a_q, a_bf, a_nib, a_ms, b_q, b_bf, b_nib, b_ms)

@@ -15,13 +15,23 @@ and writes the *selected* fake-quantized block (E4M3 / E5M2 / original
 BF16 passthrough) plus the per-block selection id and stats. The operand
 is read from HBM exactly once and only the winner is written back.
 
-Selection ids: 0 = E4M3, 1 = E5M2, 2 = BF16 (original values).
+Selection ids: 0 = E4M3, 1 = E5M2, 2 = BF16 (original values),
+3 = NVFP4 (sub4 only).
 
-Modes mirror the paper's recipes:
+Modes mirror the paper's recipes (+ the §5 NVFP4 outlook):
   * ``sub2``: E4M3 iff it beats the E5M2 benchmark (Eq. 3), else BF16.
   * ``sub3``: E4M3 -> E5M2 (Eq. 4 range gate) -> BF16.
+  * ``sub4``: NVFP4 (Eq. 3 vs the E4M3 benchmark + the Eq. 4-style
+    NVFP4 range gate) -> the sub3 cascade. The NVFP4 candidate is the
+    two-level scheme of ``core.formats.cast_to_nvfp4``: GAM block scale
+    targeting 448*6, then one E4M3 micro scale per 16 contraction
+    elements. Per-16 micro amaxes ride in as a (bm, bk/16) input block
+    (one cheap XLA segment reduce, like the group mantissas); inside
+    the kernel they are broadcast back to (bm, bk) with a one-hot f32
+    matmul (exact: one summand per output lane), which Mosaic lowers
+    where a lane-splitting reshape would not.
 
-Grid: (M/bm, K/bk). Group mantissas for both formats come in as a (1, 2)
+Grid: (M/bm, K/bk). Group mantissas for all formats come in as a (1, 3)
 block computed outside the kernel from the global amax (one cheap XLA
 reduce), exactly like ``gam_quant_blocks``.
 """
@@ -34,6 +44,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import E2M1_AMAX, NVFP4_MICRO, round_to_e2m1
+
+from .ref import expand_micro_onehot
 
 __all__ = ["mor_select_blocks"]
 
@@ -55,15 +69,22 @@ def _split_me(s):
 
 
 def _exp2i(e):
-    e = jnp.clip(e, -126, 126)
+    # Full E8M0 domain [-126, 127], matching core.gam (the 126 clamp
+    # was the double-rounding bug on tiny-amax blocks).
+    e = jnp.clip(e, -126, 127)
     return jax.lax.bitcast_convert_type(
         (e + 127) << 23, jnp.float32
     )
 
 
-def _kernel(mg_ref, x_ref, y_ref, sel_ref, e4_ref, e5_ref, cnt_ref,
-            *, q_amax4: float, q_amax5: float, dt4, dt5,
-            mode: str, algo: str, range_ratio: float):
+def _kernel(mg_ref, *refs, q_amax4: float, q_amax5: float,
+            q_amax_nv: float, dt4, dt5, mode: str, algo: str,
+            range_ratio: float, nv_range_ratio: float):
+    if mode == "sub4":
+        (ma_ref, x_ref, y_ref, sel_ref, e4_ref, e5_ref, cnt_ref,
+         nv_ref) = refs
+    else:
+        x_ref, y_ref, sel_ref, e4_ref, e5_ref, cnt_ref = refs
     i, j = pl.program_id(0), pl.program_id(1)
     x = x_ref[...].astype(jnp.float32)
     ax = jnp.abs(x)
@@ -75,24 +96,29 @@ def _kernel(mg_ref, x_ref, y_ref, sel_ref, e4_ref, e5_ref, cnt_ref,
     nz = x != 0.0
     cnt = jnp.sum(nz.astype(jnp.float32))
 
-    def candidate(q_amax, m_g, out_dtype):
+    def gam_scale(q_amax, m_g):
         s_b = q_amax / safe_b  # (1, 1)
         m_b, e_b = _split_me(s_b)
         if algo == "gam":
             # Alg. 1 rounding: avoid saturation when m_g > m_b.
             e_b = jnp.where(m_g <= m_b, e_b, e_b - 1)
-            scale = m_g * _exp2i(e_b)
-        elif algo == "e8m0":
-            scale = _exp2i(e_b)
-        else:  # fp32_amax
-            scale = s_b
-        xs = jnp.clip(x * scale, -q_amax, q_amax)
-        xq = xs.astype(out_dtype).astype(jnp.float32) / scale
+            return m_g * _exp2i(e_b)
+        if algo == "e8m0":
+            return _exp2i(e_b)
+        return s_b  # fp32_amax
+
+    def rel_err_sum(xq_stored):
         # Eq. 3 compares errors of the *stored* (Fig. 4: BF16) values.
-        xq_stored = xq.astype(x_ref.dtype)
         xqf = xq_stored.astype(jnp.float32)
         rel = jnp.where(nz, jnp.abs((x - xqf) / jnp.where(nz, x, 1.0)), 0.0)
-        return xq_stored, jnp.sum(rel)
+        return jnp.sum(rel)
+
+    def candidate(q_amax, m_g, out_dtype):
+        scale = gam_scale(q_amax, m_g)
+        xs = jnp.clip(x * scale, -q_amax, q_amax)
+        xq = xs.astype(out_dtype).astype(jnp.float32) / scale
+        xq_stored = xq.astype(x_ref.dtype)
+        return xq_stored, rel_err_sum(xq_stored)
 
     q4, e4 = candidate(q_amax4, mg_ref[0, 0], dt4)
     q5, e5 = candidate(q_amax5, mg_ref[0, 1], dt5)
@@ -100,19 +126,58 @@ def _kernel(mg_ref, x_ref, y_ref, sel_ref, e4_ref, e5_ref, cnt_ref,
     m1 = e4 < e5  # Eq. 3: E4M3 beats the E5M2 benchmark on total rel-err.
     if mode == "sub2":
         use5 = jnp.bool_(False)
-    else:  # sub3: Eq. 4 dynamic-range gate for the E5M2 fallback.
+    else:  # sub3/sub4: Eq. 4 dynamic-range gate for the E5M2 fallback.
         anynz = cnt > 0
         bmin = jnp.min(jnp.where(nz, ax, _F32_BIG))
         ratio = jnp.where(anynz, bmax / jnp.where(anynz, bmin, 1.0), 1.0)
         use5 = jnp.logical_and(jnp.logical_not(m1), ratio < range_ratio)
 
-    y_ref[...] = jnp.where(m1, q4, jnp.where(use5, q5, x_ref[...]))
+    y = jnp.where(m1, q4, jnp.where(use5, q5, x_ref[...]))
+    sel = jnp.where(
+        m1, jnp.int32(0), jnp.where(use5, jnp.int32(1), jnp.int32(2))
+    )
+
+    if mode == "sub4":
+        # Two-level NVFP4 candidate: GAM block scale targeting 448*6,
+        # then one E4M3 micro scale per 16 contraction elements (the
+        # micro amaxes arrive as a whole row stripe -- see
+        # _expand_micro; micro_amax(x)*scale == micro_amax(x*scale)
+        # bit-exactly: f32 multiply by a positive scale is monotone
+        # and commutes with abs).
+        g16 = x.shape[-1] // NVFP4_MICRO
+        scale_nv = gam_scale(q_amax_nv, mg_ref[0, 2])
+        ma = ma_ref[...]  # (bm, K/16) raw micro-group amax stripe
+        d = ma * scale_nv / E2M1_AMAX
+        d_q = jnp.clip(d, -448.0, 448.0).astype(
+            jnp.float8_e4m3fn
+        ).astype(jnp.float32)
+        safe_d = jnp.where(d_q > 0, d_q, 1.0)
+        d_exp = expand_micro_onehot(safe_d, x.shape[-1], j * g16)
+        xs = x * scale_nv
+        qn = round_to_e2m1(xs / d_exp) * d_exp
+        qn_stored = (qn / scale_nv).astype(x_ref.dtype)
+        env = rel_err_sum(qn_stored)
+        # Eq. 4-style gate on this block's micro-group amaxes (what
+        # the E4M3 micro scales must represent; intra-group range is
+        # already priced into env by Eq. 3). Mask the stripe to grid
+        # step j's group window.
+        gcol = jax.lax.broadcasted_iota(jnp.int32, ma.shape, 1)
+        in_blk = jnp.logical_and(gcol >= j * g16, gcol < (j + 1) * g16)
+        ga_min = jnp.min(
+            jnp.where(jnp.logical_and(in_blk, ma > 0), ma, _F32_BIG)
+        )
+        g_ratio = jnp.where(anynz, bmax / jnp.where(anynz, ga_min, 1.0),
+                            1.0)
+        use_nv = jnp.logical_and(env < e4, g_ratio < nv_range_ratio)
+        y = jnp.where(use_nv, qn_stored, y)
+        sel = jnp.where(use_nv, jnp.int32(3), sel)
+        nv_ref[i, j] = env
+
+    y_ref[...] = y
     # The (nm, nk) stat outputs live whole in SMEM across the grid (TPU
     # tiling forbids (1, 1) VMEM blocks and VMEM rejects scalar stores);
     # each step writes its own cell.
-    sel_ref[i, j] = jnp.where(
-        m1, jnp.int32(0), jnp.where(use5, jnp.int32(1), jnp.int32(2))
-    )
+    sel_ref[i, j] = sel
     e4_ref[i, j] = e4
     e5_ref[i, j] = e5
     cnt_ref[i, j] = cnt
@@ -121,8 +186,8 @@ def _kernel(mg_ref, x_ref, y_ref, sel_ref, e4_ref, e5_ref, cnt_ref,
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "block", "q_amax4", "q_amax5", "dt4", "dt5", "mode", "algo",
-        "range_ratio", "interpret",
+        "block", "q_amax4", "q_amax5", "q_amax_nv", "dt4", "dt5", "mode",
+        "algo", "range_ratio", "nv_range_ratio", "interpret",
     ),
 )
 def mor_select_blocks(
@@ -132,54 +197,93 @@ def mor_select_blocks(
     block: Tuple[int, int] = (128, 128),
     q_amax4: float = 448.0,
     q_amax5: float = 57344.0,
+    q_amax_nv: float = 448.0 * 6.0,
     dt4=jnp.float8_e4m3fn,
     dt5=jnp.float8_e5m2,
     mode: str = "sub3",
     algo: str = "gam",
     range_ratio: float = 57344.0 / 2.0**-14,
+    nv_range_ratio: float = 12.0 * 448.0 / 2.0**-9,  # NVFP4_RANGE_RATIO
     interpret: bool = False,
 ):
-    """x: (M, K) with M % bm == 0, K % bk == 0.
+    """x: (M, K) with M % bm == 0, K % bk == 0 (and bk % 16 == 0 for
+    ``mode='sub4'``).
 
-    group_mantissas: (2,) f32 -- [m_g(E4M3), m_g(E5M2)] (both 1.0 for the
-    e8m0 / fp32_amax ablations).
+    group_mantissas: (3,) f32 -- [m_g(E4M3), m_g(E5M2), m_g(NVFP4)]
+    (all 1.0 for the e8m0 / fp32_amax ablations; the NVFP4 slot is
+    ignored outside sub4 but always present so the operand layout is
+    mode-independent). A legacy (2,) vector is accepted for
+    sub2/sub3 callers and padded with 1.0.
 
     Returns (y selected fake-quant in x.dtype, sel (nm, nk) i32,
     e4_err_sums (nm, nk) f32, e5_err_sums (nm, nk) f32,
-    counts (nm, nk) f32).
+    counts (nm, nk) f32[, nv_err_sums (nm, nk) f32 -- sub4 only]).
     """
     M, K = x.shape
     bm, bk = block
     assert M % bm == 0 and K % bk == 0, (x.shape, block)
-    assert mode in ("sub2", "sub3"), mode
+    assert mode in ("sub2", "sub3", "sub4"), mode
     nm, nk = M // bm, K // bk
-    mg = jnp.reshape(group_mantissas.astype(jnp.float32), (1, 2))
+    gm = jnp.reshape(group_mantissas.astype(jnp.float32), (-1,))
+    if gm.shape[0] == 2:  # legacy sub2/sub3 callers: no NVFP4 slot
+        assert mode != "sub4", "sub4 needs the NVFP4 group mantissa"
+        gm = jnp.concatenate([gm, jnp.ones((1,), jnp.float32)])
+    mg = jnp.reshape(gm, (1, 3))
 
     kernel = functools.partial(
-        _kernel, q_amax4=q_amax4, q_amax5=q_amax5, dt4=dt4, dt5=dt5,
-        mode=mode, algo=algo, range_ratio=range_ratio,
+        _kernel, q_amax4=q_amax4, q_amax5=q_amax5, q_amax_nv=q_amax_nv,
+        dt4=dt4, dt5=dt5, mode=mode, algo=algo, range_ratio=range_ratio,
+        nv_range_ratio=nv_range_ratio,
     )
-    out_shapes = (
+    in_specs = [
+        pl.BlockSpec((1, 3), lambda i, j: (0, 0)),  # group mantissas
+    ]
+    operands = [mg]
+    if mode == "sub4":
+        assert bk % NVFP4_MICRO == 0, (block, NVFP4_MICRO)
+        # Per-16-element micro amaxes: one XLA segment reduce outside
+        # the kernel (like the group mantissas). The stripe rides in
+        # whole along the contraction axis -- its (K/16) lane count is
+        # not 128-divisible, and TPU tiling only accepts a
+        # non-divisible lane dim when it equals the whole array's.
+        ma = jnp.max(
+            jnp.abs(x.astype(jnp.float32)).reshape(
+                M, K // NVFP4_MICRO, NVFP4_MICRO
+            ),
+            axis=-1,
+        )
+        in_specs.append(
+            pl.BlockSpec((bm, K // NVFP4_MICRO), lambda i, j: (i, 0))
+        )
+        operands.append(ma)
+    in_specs.append(
+        pl.BlockSpec((bm, bk), lambda i, j: (i, j))  # x block (VMEM)
+    )
+    operands.append(x)
+
+    out_shapes = [
         jax.ShapeDtypeStruct((M, K), x.dtype),
         jax.ShapeDtypeStruct((nm, nk), jnp.int32),
         jax.ShapeDtypeStruct((nm, nk), jnp.float32),
         jax.ShapeDtypeStruct((nm, nk), jnp.float32),
         jax.ShapeDtypeStruct((nm, nk), jnp.float32),
-    )
+    ]
+    out_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+    ]
+    if mode == "sub4":
+        out_shapes.append(jax.ShapeDtypeStruct((nm, nk), jnp.float32))
+        out_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+
     return pl.pallas_call(
         kernel,
         grid=(nm, nk),
-        in_specs=[
-            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),  # group mantissas
-            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),  # x block (VMEM)
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
-        out_shape=out_shapes,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=tuple(out_shapes),
         interpret=interpret,
-    )(mg, x)
+    )(*operands)

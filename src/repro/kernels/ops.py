@@ -20,9 +20,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.collectives import compat_shard_map, pmax_over
-from repro.core.formats import E4M3, E5M2, FormatSpec
+from repro.core.formats import E4M3, E5M2, NVFP4, NVFP4_MICRO, FormatSpec
 from repro.core.gam import split_mantissa_exponent
-from repro.core.metrics import E5M2_RANGE_RATIO
+from repro.core.metrics import E5M2_RANGE_RATIO, NVFP4_RANGE_RATIO
 from repro.core.partition import Partition, _pad2d
 
 from . import ref as _ref
@@ -147,30 +147,41 @@ def mor_select(
     backend: str = "auto",
     mesh_axes=(),
 ) -> MorSelect:
-    """Fused sub-tensor MoR selection (§3.2) of a 2-D operand.
+    """Fused sub-tensor MoR selection (§3.2, + sub4) of a 2-D operand.
 
-    One pass per block: both fp8 candidates, Eq. 3 error comparison,
-    Eq. 4 range gate (sub3), and the per-block select -- versus the three
-    full operand passes of the naive lowering. ``mesh_axes``: shard_map
+    One pass per block: the fp8 candidates (and for ``mode='sub4'`` the
+    two-level NVFP4 candidate), Eq. 3 error comparison, Eq. 4 range
+    gates, and the per-block select -- versus the three-plus full
+    operand passes of the naive lowering. ``mesh_axes``: shard_map
     axes to allreduce the group amax over (per-block sums/selects stay
     shard-local; the Eq. 3/4 gates are per-block, so with a global
-    amax every shard makes the single-device choice bit-for-bit).
+    amax every shard makes the single-device choice bit-for-bit --
+    NVFP4 micro scales derive from the block data and the allreduced
+    group amax, so sharded sub4 packs stay bit-identical too).
     """
     be = _kernel_backend(backend, part)
-    if be == "xla":
-        return _ref.mor_select_ref(x, part, mode, algo, mesh_axes=mesh_axes)
     M, K = x.shape
     bm, bk = part.resolve(x.shape)
+    if mode == "sub4" and bk % NVFP4_MICRO:
+        # Micro-blocks need 16-divisible contraction blocks; the sub4
+        # recipe's aligned partition guarantees this, direct callers
+        # with exotic blocks take the (internally padding) XLA path.
+        be = "xla"
+    if be == "xla":
+        return _ref.mor_select_ref(x, part, mode, algo, mesh_axes=mesh_axes)
     xp = _pad2d(x, bm, bk)
     g_amax, safe_g = _group_amax(x, mesh_axes)
     mg4 = _group_mantissa(safe_g, E4M3, algo)
     mg5 = _group_mantissa(safe_g, E5M2, algo)
-    y, sel, e4_sums, e5_sums, counts = mor_select_blocks(
-        xp, jnp.stack([mg4, mg5]),
+    mgnv = _group_mantissa(safe_g, NVFP4, algo)
+    out = mor_select_blocks(
+        xp, jnp.stack([mg4, mg5, mgnv]),
         block=(bm, bk), q_amax4=E4M3.amax, q_amax5=E5M2.amax,
-        dt4=E4M3.dtype, dt5=E5M2.dtype, mode=mode, algo=algo,
-        range_ratio=E5M2_RANGE_RATIO, interpret=(be == "interpret"),
+        q_amax_nv=NVFP4.amax, dt4=E4M3.dtype, dt5=E5M2.dtype, mode=mode,
+        algo=algo, range_ratio=E5M2_RANGE_RATIO,
+        nv_range_ratio=NVFP4_RANGE_RATIO, interpret=(be == "interpret"),
     )
+    y, sel, e4_sums, e5_sums, counts = out[:5]
     return MorSelect(
         y=y[:M, :K],
         sel=sel,
@@ -179,6 +190,7 @@ def mor_select(
         counts=counts,
         group_amax=g_amax,
         group_mantissa=mg4,
+        nv_sums=out[5] if mode == "sub4" else None,
     )
 
 
@@ -240,8 +252,10 @@ def mixed_gemm(
         return _ref.mixed_gemm_ref(a, b, out_dtype)
     assert a.block[1] == b.block[1], (a.block, b.block)
     out = mixed_gemm_blocks(
-        a.payload_q, a.payload_bf16, a.tags, a.scales,
-        b.payload_q, b.payload_bf16, b.tags, b.scales,
+        a.payload_q, a.payload_bf16, a.payload_nib, a.micro_scales,
+        a.tags, a.scales,
+        b.payload_q, b.payload_bf16, b.payload_nib, b.micro_scales,
+        b.tags, b.scales,
         block=(a.block[0], b.block[0], a.block[1]),
         out_dtype=out_dtype,
         interpret=(be == "interpret"),
@@ -268,7 +282,7 @@ def mixed_dot(
     return mixed_gemm(a, mo, out_dtype=out_dtype, backend=backend)
 
 
-def _local_mixed(payload_q, payload_bf16, tags, scales, block):
+def _local_mixed(payload_q, payload_bf16, nib, ms, tags, scales, block):
     """Rebuild a shard-local MixedOperand from shard_map-sliced leaves.
 
     The local logical shape is the local *padded* shape: per-shard
@@ -277,7 +291,8 @@ def _local_mixed(payload_q, payload_bf16, tags, scales, block):
     assembled global output back to the logical (M, N) once.
     """
     shape = (tags.shape[-2] * block[0], tags.shape[-1] * block[1])
-    return MixedOperand(payload_q, payload_bf16, tags, scales, block, shape)
+    return MixedOperand(payload_q, payload_bf16, tags, scales, block,
+                        shape, nib, ms)
 
 
 def sharded_mixed_gemm(
@@ -344,10 +359,10 @@ def sharded_mixed_gemm(
     inner_dtype = jnp.float32 if contract_axis else out_dtype
     block_a, block_b = a.block, b.block
 
-    def body(aq, abf, at, asc, bq, bbf, bt, bsc):
+    def body(aq, abf, anib, ams, at, asc, bq, bbf, bnib, bms, bt, bsc):
         out = mixed_gemm(
-            _local_mixed(aq, abf, at, asc, block_a),
-            _local_mixed(bq, bbf, bt, bsc, block_b),
+            _local_mixed(aq, abf, anib, ams, at, asc, block_a),
+            _local_mixed(bq, bbf, bnib, bms, bt, bsc, block_b),
             out_dtype=inner_dtype,
             backend=backend,
         )
@@ -361,8 +376,10 @@ def sharded_mixed_gemm(
         out_specs=P(row_axis, col_axis),
     )
     out = sm(
-        a.payload_q, a.payload_bf16, a.tags, a.scales,
-        b.payload_q, b.payload_bf16, b.tags, b.scales,
+        a.payload_q, a.payload_bf16, a.payload_nib, a.micro_scales,
+        a.tags, a.scales,
+        b.payload_q, b.payload_bf16, b.payload_nib, b.micro_scales,
+        b.tags, b.scales,
     )
     return out[: a.shape[0], : b.shape[0]]
 

@@ -17,18 +17,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.collectives import pmax_over
-from repro.core.formats import E4M3, E5M2, FormatSpec, cast_to_format
+from repro.core.formats import (
+    E2M1_AMAX,
+    E4M3,
+    E5M2,
+    NVFP4,
+    NVFP4_MICRO,
+    FormatSpec,
+    cast_to_format,
+    decode_e2m1,
+    encode_e2m1,
+    round_to_e2m1,
+)
 from repro.core.gam import compute_scales, scales_from_bmax
-from repro.core.metrics import E5M2_RANGE_RATIO
+from repro.core.metrics import E5M2_RANGE_RATIO, NVFP4_RANGE_RATIO
 from repro.core.partition import Partition, _pad2d, from_blocks, to_blocks
 
 __all__ = [
     "TAG_E4M3",
     "TAG_E5M2",
     "TAG_BF16",
+    "TAG_NVFP4",
     "QuantErr",
     "MorSelect",
     "MixedOperand",
+    "expand_micro_onehot",
+    "nvfp4_block_capable",
     "pack_mixed",
     "passthrough_mixed",
     "activation_row_block",
@@ -43,10 +57,53 @@ __all__ = [
 
 # Per-block representation tags: the contract between the MoR selection
 # (repro.kernels.mor_select emits exactly these ids), the packing layer
-# below, and the mixed-representation GEMM kernel.
+# below, and the mixed-representation GEMM kernel. TAG_NVFP4 blocks
+# store packed E2M1 nibbles + per-16-element E4M3 micro scales (sub4
+# recipe) instead of a byte-per-element fp8 payload.
 TAG_E4M3 = 0
 TAG_E5M2 = 1
 TAG_BF16 = 2
+TAG_NVFP4 = 3
+
+
+def nvfp4_block_capable(block: Tuple[int, int]) -> bool:
+    """Whether a block shape can hold NVFP4 payloads: nibble packing
+    pairs rows (even rows) and micro scales group NVFP4_MICRO
+    contraction elements (16-divisible columns). Non-capable blocks can
+    never carry TAG_NVFP4 (the sub4 recipe aligns its partition to
+    (2, 16); packing rejects violations)."""
+    br, bk = block
+    return br % 2 == 0 and bk % NVFP4_MICRO == 0
+
+
+def expand_micro_onehot(d: jnp.ndarray, bk: int, g0) -> jnp.ndarray:
+    """(rows, G) per-micro-group row stripe -> (rows, bk) for the block
+    whose first group index is ``g0``, via an exact one-hot f32 matmul
+    (each output lane sums its single group value plus zeros).
+
+    Shared by the selection and GEMM kernels: Mosaic lowers
+    dot_general where a lane-splitting reshape/repeat would not, and
+    the stripes ride in whole because a (rows, bk/16) block would
+    violate the 128-lane tile. The matmul is bit-exact (one non-zero
+    summand per output lane), so both kernels reproduce the
+    jnp.repeat-based references bit-for-bit.
+    """
+    G = d.shape[-1]
+    r = jax.lax.broadcasted_iota(jnp.int32, (G, bk), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+    onehot = (g0 + c // NVFP4_MICRO == r).astype(jnp.float32)
+    return jax.lax.dot_general(
+        d, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _nib_compact_shape(block: Tuple[int, int]) -> Tuple[int, int]:
+    return (max(block[0] // 2, 1), block[1])
+
+
+def _ms_compact_shape(block: Tuple[int, int]) -> Tuple[int, int]:
+    return (block[0], max(block[1] // NVFP4_MICRO, 1))
 
 
 class QuantErr(NamedTuple):
@@ -67,14 +124,18 @@ class QuantErr(NamedTuple):
 
 
 class MorSelect(NamedTuple):
-    """One fused sub-tensor selection event (paper §3.2).
+    """One fused sub-tensor selection event (paper §3.2 + the sub4
+    NVFP4 extension).
 
     y:          (M, K) per-block selected output in the input dtype.
-    sel:        (nm, nk) i32 selection id: 0=E4M3, 1=E5M2, 2=BF16.
+    sel:        (nm, nk) i32 selection id: 0=E4M3, 1=E5M2, 2=BF16,
+                3=NVFP4 (sub4 only).
     e4_sums:    (nm, nk) f32 E4M3 per-block relative-error sums.
     e5_sums:    (nm, nk) f32 E5M2 per-block relative-error sums.
     counts:     (nm, nk) f32 per-block non-zero element counts.
     group_amax / group_mantissa: as in :class:`QuantErr` (E4M3's m_g).
+    nv_sums:    (nm, nk) f32 NVFP4 per-block relative-error sums
+                (None for sub2/sub3).
     """
 
     y: jnp.ndarray
@@ -84,6 +145,7 @@ class MorSelect(NamedTuple):
     counts: jnp.ndarray
     group_amax: jnp.ndarray
     group_mantissa: jnp.ndarray
+    nv_sums: jnp.ndarray | None = None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -93,22 +155,34 @@ class MixedOperand:
 
     The operand is seen in its *quantization view*: (R, K) with the
     contraction axis last, zero-padded to a multiple of ``block``.
-    Per-block storage is a dual buffer (see kernels/README.md):
+    Per-block storage is a tri-lane buffer (see kernels/README.md):
 
     payload_q:    (Rp, Kp) uint8 -- raw fp8 bits (E4M3 bit patterns for
                   TAG_E4M3 blocks, E5M2 for TAG_E5M2; zero elsewhere).
     payload_bf16: (Rp, Kp) original-precision buffer in the operand's
                   stored dtype (bf16 in training); holds the original
                   values for TAG_BF16 blocks, zero elsewhere.
+    payload_nib:  (Rp/2, Kp) uint8 -- packed E2M1 nibbles for TAG_NVFP4
+                  blocks (zero elsewhere). Row-halves packing *per
+                  block*: within block (i, j), byte row r holds the
+                  code of logical row r in its low nibble and of row
+                  r + br/2 in its high nibble, so the kernel decode is
+                  two vector nibble extracts + one sublane concat.
+    micro_scales: (Rp, Kp/16) uint8 -- E4M3 bit patterns of the NVFP4
+                  per-16-element micro scales (bits of 1.0f for
+                  all-zero micro-groups; zero outside TAG_NVFP4 blocks).
     tags:         (nr, nk) int32 per-block representation tag.
     scales:       (nr, nk) f32 reconstructed GAM scales (1.0 for
-                  TAG_BF16 and padding-only blocks).
+                  TAG_BF16 and padding-only blocks; the two-level
+                  NVFP4 *block* scale for TAG_NVFP4 blocks).
     block:        (br, bk) static block shape.
     shape:        (R, K) static logical (unpadded) shape.
 
-    Either payload buffer may be *compact*: collapsed to one don't-care
-    ``(br, bk)`` block when no (concrete) tag references it -- see
-    :meth:`compact`. A fully-fp8 weight then really is ~1 byte/element.
+    Any payload lane may be *compact*: collapsed to one don't-care
+    block when no (concrete) tag references it -- see :meth:`compact`.
+    A fully-fp8 weight then really is ~1 byte/element, and a
+    fully-NVFP4 weight ~0.56 bytes/element (0.5 payload + 1/16
+    micro-scale).
     """
 
     payload_q: jnp.ndarray
@@ -117,16 +191,36 @@ class MixedOperand:
     scales: jnp.ndarray
     block: Tuple[int, int]
     shape: Tuple[int, int]
+    payload_nib: jnp.ndarray = None
+    micro_scales: jnp.ndarray = None
+
+    def __post_init__(self):
+        # Sub-byte lanes are optional at construction (pre-NVFP4 call
+        # sites); default to compact don't-care blocks so the pytree
+        # structure is uniform and every consumer can assume them.
+        if self.payload_nib is None:
+            lead = jnp.shape(self.tags)[:-2]
+            self.payload_nib = jnp.zeros(
+                (*lead, *_nib_compact_shape(self.block)), jnp.uint8
+            )
+        if self.micro_scales is None:
+            lead = jnp.shape(self.tags)[:-2]
+            self.micro_scales = jnp.zeros(
+                (*lead, *_ms_compact_shape(self.block)), jnp.uint8
+            )
 
     def tree_flatten(self):
         return (
-            (self.payload_q, self.payload_bf16, self.tags, self.scales),
+            (self.payload_q, self.payload_bf16, self.tags, self.scales,
+             self.payload_nib, self.micro_scales),
             (self.block, self.shape),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        pq, pbf, tags, scales, nib, ms = children
+        block, shape = aux
+        return cls(pq, pbf, tags, scales, block, shape, nib, ms)
 
     @property
     def padded_shape(self) -> Tuple[int, int]:
@@ -138,7 +232,7 @@ class MixedOperand:
         )
 
     def compact(self) -> "MixedOperand":
-        """Drop whichever dual buffer no tag references down to a single
+        """Drop every payload lane no tag references down to a single
         don't-care block. Host-side only (needs concrete tags); leading
         stack axes (layer-stacked serving weights) are preserved so
         ``lax.scan`` slicing keeps working."""
@@ -146,15 +240,26 @@ class MixedOperand:
         br, bk = self.block
         lead = self.payload_q.shape[:-2]
         out = self
-        if not (tags != TAG_BF16).any():
+        is_fp8 = (tags == TAG_E4M3) | (tags == TAG_E5M2)
+        if not is_fp8.any():
             out = dataclasses.replace(
                 out, payload_q=jnp.zeros((*lead, br, bk), jnp.uint8)
             )
-        elif not (tags == TAG_BF16).any():
+        if not (tags == TAG_BF16).any():
             out = dataclasses.replace(
                 out,
                 payload_bf16=jnp.zeros(
                     (*lead, br, bk), self.payload_bf16.dtype
+                ),
+            )
+        if not (tags == TAG_NVFP4).any():
+            out = dataclasses.replace(
+                out,
+                payload_nib=jnp.zeros(
+                    (*lead, *_nib_compact_shape(self.block)), jnp.uint8
+                ),
+                micro_scales=jnp.zeros(
+                    (*lead, *_ms_compact_shape(self.block)), jnp.uint8
                 ),
             )
         return out
@@ -162,18 +267,44 @@ class MixedOperand:
     def transpose(self) -> "MixedOperand":
         """The transposed quantization view (exact: per-block tags,
         scales and payloads are permutation-invariant under block
-        transpose)."""
+        transpose). NVFP4 blocks are *not* transpose-invariant -- their
+        nibble pairing and 1x16 micro-blocks follow the contraction
+        direction -- so packs holding TAG_NVFP4 blocks must re-quantize
+        the transposed view instead (core.linear gates this on the
+        recipe; concrete tags are also checked here)."""
         assert self.tags.ndim == 2, (
             "transpose() is for single-matrix operands; slice a stacked "
             "operand per layer first (lax.scan or _layer_mo)"
         )
+        # NVFP4 precondition, enforced *statically* so it also fires
+        # under jit (where tags are tracers and content checks would
+        # silently pass): dense sub-byte lanes mean the pack was built
+        # with_nvfp4 and may carry TAG_NVFP4 blocks.
+        nr, nk = self.tags.shape
+        dense_nib = (nr > 1 or nk > 1) and tuple(
+            self.payload_nib.shape
+        ) == (self.padded_shape[0] // 2, self.padded_shape[1])
+        no_nv_msg = (
+            "cannot transpose a pack with NVFP4 payload lanes: micro "
+            "scales are contraction-directed (re-quantize the "
+            "transposed view)"
+        )
+        assert not dense_nib, no_nv_msg
+        if not isinstance(self.tags, jax.core.Tracer):
+            assert not (np.asarray(self.tags) == TAG_NVFP4).any(), \
+                no_nv_msg
+        blockT = (self.block[1], self.block[0])
         return MixedOperand(
             payload_q=self.payload_q.T,
             payload_bf16=self.payload_bf16.T,
             tags=self.tags.T,
             scales=self.scales.T,
-            block=(self.block[1], self.block[0]),
+            block=blockT,
             shape=(self.shape[1], self.shape[0]),
+            # Sub-byte lanes hold no data here (no NVFP4 tags): fresh
+            # compact blocks in the transposed geometry.
+            payload_nib=jnp.zeros(_nib_compact_shape(blockT), jnp.uint8),
+            micro_scales=jnp.zeros(_ms_compact_shape(blockT), jnp.uint8),
         )
 
     def dequant(self) -> jnp.ndarray:
@@ -182,12 +313,39 @@ class MixedOperand:
         return decode_mixed_ref(self)[:R, :K]
 
 
+def _nvfp4_lanes(xf, s_nv, tags, block):
+    """(nib blocks (nr, nk, br/2, bk), micro-scale blocks (nr, nk, br,
+    bk/16)) of the NVFP4 candidate for every block. xf: (nr, nk, br,
+    bk) f32; s_nv: (nr, nk) block scales targeting NVFP4.amax. Blocks
+    not tagged NVFP4 get zeroed lanes."""
+    nr, nk = xf.shape[:2]
+    br, bk = block
+    ng = bk // NVFP4_MICRO
+    xs = xf * s_nv[:, :, None, None]
+    g = xs.reshape(nr, nk, br, ng, NVFP4_MICRO)
+    d = jnp.max(jnp.abs(g), axis=-1) / E2M1_AMAX  # (nr, nk, br, ng)
+    d_q = cast_to_format(d, E4M3)
+    safe_d = jnp.where(d_q > 0, d_q, 1.0)
+    q = round_to_e2m1(g / safe_d[..., None]).reshape(nr, nk, br, bk)
+    codes = encode_e2m1(q)
+    nib = (codes[:, :, : br // 2, :]
+           | (codes[:, :, br // 2 :, :] << 4)).astype(jnp.uint8)
+    ms = jax.lax.bitcast_convert_type(
+        safe_d.astype(jnp.float8_e4m3fn), jnp.uint8
+    )
+    t = tags[:, :, None, None]
+    nib = jnp.where(t == TAG_NVFP4, nib, jnp.uint8(0))
+    ms = jnp.where(t == TAG_NVFP4, ms, jnp.uint8(0))
+    return nib, ms
+
+
 def pack_mixed(
     x2d: jnp.ndarray,
     tags: jnp.ndarray,
     block: Tuple[int, int],
     algo: str = "gam",
     group_amax: jnp.ndarray | None = None,
+    with_nvfp4: bool = False,
 ) -> MixedOperand:
     """Real-quantize a 2-D operand into the mixed block layout.
 
@@ -201,10 +359,19 @@ def pack_mixed(
     ``group_amax``: the (already allreduced, when sharded) group amax;
     must be supplied for a shard of a larger operand or the shard-local
     Alg. 1 mantissa would diverge from the decisions in ``tags``.
+
+    ``with_nvfp4``: build the packed-nibble + micro-scale lanes for
+    TAG_NVFP4 blocks (sub4 recipe). Static so three-way-and-below
+    recipes pay nothing and keep byte-identical packs; requires an
+    NVFP4-capable block (even rows, 16-divisible columns).
     """
     br, bk = block
+    # Pad up front so the block view keeps the caller's exact block
+    # (Partition.resolve would shrink an align-rounded block back to
+    # the raw operand extent).
+    xp = _pad2d(x2d, br, bk)
     part = Partition("block", (br, bk))
-    xb = to_blocks(x2d, part)  # (nr, nk, br, bk) original dtype
+    xb = to_blocks(xp, part)  # (nr, nk, br, bk) original dtype
     nr, nk = xb.shape[:2]
     assert tags.shape == (nr, nk), (tags.shape, (nr, nk))
 
@@ -230,6 +397,27 @@ def pack_mixed(
     ).astype(jnp.float32)
 
     padded = (nr * br, nk * bk)
+    if with_nvfp4:
+        if not nvfp4_block_capable(block):
+            raise ValueError(
+                f"NVFP4 packing needs an even-row, {NVFP4_MICRO}-"
+                f"divisible-column block, got {block} (the sub4 recipe "
+                "aligns its partition to (2, 16) automatically)"
+            )
+        s_nv = scales_from_bmax(
+            bmax, NVFP4, algo, group_amax=group_amax
+        ).scale
+        nib, ms = _nvfp4_lanes(xf, s_nv, tags, block)
+        scales = jnp.where(tags == TAG_NVFP4, s_nv, scales).astype(
+            jnp.float32
+        )
+        payload_nib = from_blocks(nib, (padded[0] // 2, padded[1]))
+        micro_scales = from_blocks(
+            ms, (padded[0], padded[1] // NVFP4_MICRO)
+        )
+    else:
+        payload_nib = jnp.zeros(_nib_compact_shape(block), jnp.uint8)
+        micro_scales = jnp.zeros(_ms_compact_shape(block), jnp.uint8)
     return MixedOperand(
         payload_q=from_blocks(payload_q, padded),
         payload_bf16=from_blocks(payload_bf16, padded),
@@ -237,6 +425,8 @@ def pack_mixed(
         scales=scales,
         block=(br, bk),
         shape=tuple(x2d.shape),
+        payload_nib=payload_nib,
+        micro_scales=micro_scales,
     )
 
 
@@ -245,7 +435,8 @@ def passthrough_mixed(
 ) -> MixedOperand:
     """All-BF16 mixed layout of an unquantized operand (e.g. the
     activation side of a serving GEMM against real-quantized weights).
-    The fp8 buffer is compact (one don't-care block) by construction."""
+    The fp8 and sub-byte buffers are compact (one don't-care block) by
+    construction."""
     br, bk = block
     xp = _pad2d(x2d, br, bk)
     nr, nk = xp.shape[0] // br, xp.shape[1] // bk
@@ -279,6 +470,7 @@ def decode_mixed_ref(mo: MixedOperand) -> jnp.ndarray:
     """Padded (Rp, Kp) stored values in the operand's original dtype --
     the exact values the mixed GEMM kernel reconstructs in-register."""
     br, bk = mo.block
+    Rp, Kp = mo.padded_shape
     part = Partition("block", (br, bk))
     qb = to_blocks(
         _full_buffer(mo.payload_q, mo.padded_shape, jnp.uint8), part
@@ -301,6 +493,29 @@ def decode_mixed_ref(mo: MixedOperand) -> jnp.ndarray:
         part,
     )
     yb = jnp.where(t == TAG_BF16, bfb, f8)
+    if nvfp4_block_capable(mo.block):
+        # NVFP4 lane: unpack row-halved nibbles + expand micro scales.
+        # Non-capable blocks can never carry TAG_NVFP4, so the branch
+        # is a static shape decision.
+        nibb = to_blocks(
+            _full_buffer(mo.payload_nib, (Rp // 2, Kp), jnp.uint8),
+            Partition("block", (br // 2, bk)),
+        ).astype(jnp.int32)
+        lo = decode_e2m1(nibb & 15)
+        hi = decode_e2m1(nibb >> 4)
+        vals = jnp.concatenate([lo, hi], axis=2)  # (nr, nk, br, bk)
+        msb = to_blocks(
+            _full_buffer(
+                mo.micro_scales, (Rp, Kp // NVFP4_MICRO), jnp.uint8
+            ),
+            Partition("block", (br, bk // NVFP4_MICRO)),
+        )
+        d = jax.lax.bitcast_convert_type(
+            msb, jnp.float8_e4m3fn
+        ).astype(jnp.float32)
+        d_exp = jnp.repeat(d, NVFP4_MICRO, axis=3)
+        nv = ((vals * d_exp) / s).astype(mo.payload_bf16.dtype)
+        yb = jnp.where(t == TAG_NVFP4, nv, yb)
     return from_blocks(yb, mo.padded_shape)
 
 
@@ -398,8 +613,9 @@ def mor_select_ref(
     x: jnp.ndarray, part: Partition, mode: str = "sub3", algo: str = "gam",
     mesh_axes=(),
 ) -> MorSelect:
-    """Reference for mor_select_blocks: fused §3.2 per-block selection."""
-    assert mode in ("sub2", "sub3"), mode
+    """Reference for mor_select_blocks: fused §3.2 per-block selection
+    (sub2/sub3), extended with the four-way sub4 NVFP4 cascade."""
+    assert mode in ("sub2", "sub3", "sub4"), mode
     xb = to_blocks(x, part)
     g = _global_amax(x, mesh_axes)
     q4b, scales4, e4_sums, counts = _blocked_quant_err(
@@ -410,6 +626,7 @@ def mor_select_ref(
     m1 = e4_sums < e5_sums  # Eq. 3
     if mode == "sub2":
         use5 = jnp.zeros_like(m1)
+        use_nv, nv_sums, qnb = None, None, None
     else:
         # Eq. 4 dynamic-range gate on the nonzero magnitudes.
         xabs = jnp.abs(xb)
@@ -421,12 +638,49 @@ def mor_select_ref(
         )
         ratio = jnp.where(anynz, bmax / jnp.where(anynz, bmin, 1.0), 1.0)
         use5 = jnp.logical_and(jnp.logical_not(m1), ratio < E5M2_RANGE_RATIO)
+        use_nv, nv_sums, qnb = None, None, None
+        if mode == "sub4":
+            # Four-way cascade: NVFP4 first (Eq. 3 against the E4M3
+            # benchmark + the Eq. 4-style NVFP4 range gate), then the
+            # plain sub3 cascade for the blocks that fall through. The
+            # NVFP4 gate is on *micro-group amaxes* (the quantity the
+            # E4M3 micro scales must represent); intra-group range is
+            # already priced into nv_sums by Eq. 3.
+            qnb, _, nv_sums, _ = _blocked_quant_err(
+                xb, NVFP4, algo, group_amax=g
+            )
+            nm_, nk_, bm_, bk_ = xb.shape
+            pad_g = (-bk_) % NVFP4_MICRO
+            xbg = xb.astype(jnp.float32)
+            if pad_g:
+                xbg = jnp.concatenate(
+                    [xbg, jnp.zeros((nm_, nk_, bm_, pad_g), jnp.float32)],
+                    axis=-1,
+                )
+            ga = jnp.max(
+                jnp.abs(xbg).reshape(nm_, nk_, bm_, -1, NVFP4_MICRO),
+                axis=-1,
+            )  # (nm, nk, bm, ng) micro-group amaxes
+            gnz = ga > 0
+            big = jnp.float32(jnp.finfo(jnp.float32).max)
+            ga_min = jnp.min(
+                jnp.where(gnz, ga, big), axis=(2, 3)
+            )
+            g_ratio = jnp.where(
+                anynz, bmax / jnp.where(anynz, ga_min, 1.0), 1.0
+            )
+            use_nv = jnp.logical_and(
+                nv_sums < e4_sums, g_ratio < NVFP4_RANGE_RATIO
+            )
 
     m1b = m1[:, :, None, None]
     yb = jnp.where(m1b, q4b, jnp.where(use5[:, :, None, None], q5b, xb))
     sel = jnp.where(
         m1, jnp.int32(0), jnp.where(use5, jnp.int32(1), jnp.int32(2))
     )
+    if use_nv is not None:
+        yb = jnp.where(use_nv[:, :, None, None], qnb, yb)
+        sel = jnp.where(use_nv, jnp.int32(TAG_NVFP4), sel)
     return MorSelect(
         y=from_blocks(yb, x.shape),
         sel=sel,
@@ -435,6 +689,7 @@ def mor_select_ref(
         counts=counts,
         group_amax=scales4.group_amax,
         group_mantissa=scales4.group_mantissa,
+        nv_sums=nv_sums,
     )
 
 

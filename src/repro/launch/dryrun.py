@@ -138,6 +138,8 @@ def _policy(name: str):
         return paper_default(partition="tensor")
     if name == "sub2":
         return paper_default("sub2")
+    if name in ("sub3", "sub4"):
+        return paper_default(name)
     raise ValueError(name)
 
 

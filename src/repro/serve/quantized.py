@@ -14,19 +14,22 @@ reference elsewhere) -- no dequantized weight copy is ever
 materialized.
 
 Storage/bandwidth accounting (decode is weight-bandwidth-bound, so
-this is the serving speedup): a weight whose blocks all quantize
-stores ~1 byte/element -- the bf16 side of the dual buffer collapses
-to one don't-care block (``MixedOperand.compact``) that stays
-VMEM-resident -- i.e. half the dense bf16 bytes. A genuinely *mixed*
-weight currently keeps both buffers dense (3 bytes/element; the fused
-lowering, not the byte count, is this layout's win there); streaming
-only each block's chosen payload needs the ragged per-block DMA
-follow-up noted in kernels/README.md. ``QTensor.nbytes`` reports the
-truth.
+this is the serving speedup): a weight whose blocks all quantize to
+fp8 stores ~1 byte/element -- the unused payload lanes collapse to one
+don't-care block each (``MixedOperand.compact``) that stays
+VMEM-resident -- i.e. half the dense bf16 bytes. A fully-NVFP4 weight
+(recipe 'sub4') stores ~0.56 bytes/element: 0.5 B of packed E2M1
+nibbles + 1/16 B of E4M3 micro scales, with the fp8 and bf16 lanes
+both compact. A genuinely *mixed* weight keeps its referenced lanes
+dense (the fused lowering, not the byte count, is this layout's win
+there); streaming only each block's chosen payload needs the ragged
+per-block DMA follow-up noted in kernels/README.md.
+``QTensor.nbytes`` reports the truth.
 
 The MoR recipe is whatever the policy says: 'tensor' reproduces the old
 all-or-nothing behaviour (every block E4M3 or every block BF16), 'sub2'
-and 'sub3' make genuinely mixed tensors. Layer-stacked (L, K, N)
+and 'sub3' make genuinely mixed tensors, 'sub4' adds packed-nibble
+NVFP4 blocks to the mixture. Layer-stacked (L, K, N)
 weights quantize per layer (``quantize_weight_stacked``); the scan over
 the block stack slices the QTensor leaves, so every block-stack GEMM of
 the engine runs through the mixed kernel too.
@@ -143,15 +146,19 @@ class QTensor:
 def _layer_mo(mo: MixedOperand, l: int) -> MixedOperand:
     """Layer ``l``'s 2-D view of a stacked MixedOperand (host-side; the
     in-graph equivalent is lax.scan's leading-axis slicing)."""
+
+    def sl(buf):
+        return buf[l] if buf.ndim == 3 else buf
+
     return MixedOperand(
-        payload_q=mo.payload_q[l] if mo.payload_q.ndim == 3
-        else mo.payload_q,
-        payload_bf16=mo.payload_bf16[l] if mo.payload_bf16.ndim == 3
-        else mo.payload_bf16,
+        payload_q=sl(mo.payload_q),
+        payload_bf16=sl(mo.payload_bf16),
         tags=mo.tags[l],
         scales=mo.scales[l],
         block=mo.block,
         shape=mo.shape,
+        payload_nib=sl(mo.payload_nib),
+        micro_scales=sl(mo.micro_scales),
     )
 
 
@@ -179,6 +186,7 @@ def quantize_weight(
         "frac_e4m3": float(s[3]),
         "frac_e5m2": float(s[4]),
         "frac_bf16": float(s[5]),
+        "frac_nvfp4": float(s[8]),
     }
 
 
@@ -209,6 +217,7 @@ def quantize_weight_stacked(
         "frac_e4m3": float(s[:, 3].mean()),
         "frac_e5m2": float(s[:, 4].mean()),
         "frac_bf16": float(s[:, 5].mean()),
+        "frac_nvfp4": float(s[:, 8].mean()),
     }
 
 

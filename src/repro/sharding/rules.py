@@ -30,6 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.collectives import compat_shard_map
+from repro.core.formats import NVFP4_MICRO
 from repro.kernels.ref import MixedOperand
 
 __all__ = [
@@ -195,33 +196,39 @@ def mixed_operand_pspec(
     mo: MixedOperand,
     rows: Optional[str] = None,
     cols: Optional[str] = None,
-) -> Tuple[P, P, P, P]:
-    """(payload_q, payload_bf16, tags, scales) PartitionSpecs for one
-    mixed-layout operand, sharding its quantization-view rows over
-    ``rows`` and its contraction blocks over ``cols``.
+) -> Tuple[P, P, P, P, P, P]:
+    """(payload_q, payload_bf16, payload_nib, micro_scales, tags,
+    scales) PartitionSpecs for one mixed-layout operand, sharding its
+    quantization-view rows over ``rows`` and its contraction blocks
+    over ``cols``.
 
-    All four leaves partition along the same block grid, so a shard
-    owns complete blocks together with their tag/scale metadata -- the
-    invariant the per-shard mixed GEMM kernel relies on (the SMEM
-    tag/scale operands of a shard describe exactly its payload blocks).
-    A *compact* payload buffer (one don't-care block, see
-    ``MixedOperand.compact``) is replicated: it has no row extent to
-    shard and is dead weight either way. Leading stack axes
-    (layer-stacked serving weights) stay unsharded.
+    All six leaves partition along the same block grid -- the packed
+    4-bit NVFP4 lane holds whole (br/2, bk) nibble blocks per payload
+    block and the (br, bk/16) micro-scale grid holds whole micro-scale
+    rows per block, so a shard owns complete blocks together with
+    *all* their metadata -- the invariant the per-shard mixed GEMM
+    kernel relies on (the SMEM tag/scale operands of a shard describe
+    exactly its payload blocks). A *compact* payload buffer (one
+    don't-care block, see ``MixedOperand.compact``) is replicated: it
+    has no row extent to shard and is dead weight either way. Leading
+    stack axes (layer-stacked serving weights) stay unsharded.
     """
     lead = mo.tags.ndim - 2
+    Rp, Kp = mo.padded_shape
 
     def sp(*axes) -> P:
         return P(*([None] * lead), *axes)
 
-    def payload_spec(buf) -> P:
-        if tuple(buf.shape[-2:]) != mo.padded_shape:  # compact buffer
+    def payload_spec(buf, full_shape) -> P:
+        if tuple(buf.shape[-2:]) != tuple(full_shape):  # compact buffer
             return sp(None, None)
         return sp(rows, cols)
 
     return (
-        payload_spec(mo.payload_q),
-        payload_spec(mo.payload_bf16),
+        payload_spec(mo.payload_q, (Rp, Kp)),
+        payload_spec(mo.payload_bf16, (Rp, Kp)),
+        payload_spec(mo.payload_nib, (Rp // 2, Kp)),
+        payload_spec(mo.micro_scales, (Rp, Kp // NVFP4_MICRO)),
         sp(rows, cols),
         sp(rows, cols),
     )
@@ -263,10 +270,13 @@ def qtensor_pspec_from_dense(qt, dense_spec: P, mesh: Optional[Mesh] = None):
             a_n = None
         if nk % _axis_size(mesh, a_k):
             a_k = None
-    pq, pbf, tags, scales = mixed_operand_pspec(qt.mo, rows=a_n, cols=a_k)
+    pq, pbf, nib, ms, tags, scales = mixed_operand_pspec(
+        qt.mo, rows=a_n, cols=a_k
+    )
     mo_spec = MixedOperand(
         payload_q=pq, payload_bf16=pbf, tags=tags, scales=scales,
         block=qt.mo.block, shape=qt.mo.shape,
+        payload_nib=nib, micro_scales=ms,
     )
     stats_spec = P(*([None] * qt.stats.ndim))
     return QTensor(mo=mo_spec, stats=stats_spec, shape=qt.shape)

@@ -47,27 +47,42 @@ class TrainConfig:
 
 
 def summarize_mor_stats(fwd_stats, bwd_stats) -> Dict[str, jnp.ndarray]:
-    """Reduce the per-layer/per-event stats pytrees to scalar metrics."""
+    """Reduce the per-layer/per-event stats pytrees to scalar metrics.
 
-    def frac(tree, idx):
+    Disabled-policy events (recipe 'off', decision column == -1) are
+    excluded: a passthrough event reports ``frac_bf16 = 1.0`` by
+    construction, and averaging those rows in dragged ``fwd_frac_bf16``
+    toward 1 even when every *enabled* event quantized. With no enabled
+    events at all, every metric is 0.
+    """
+
+    def rows(tree):
         leaves = [
-            l.reshape(-1, l.shape[-1])[:, idx]
+            l.reshape(-1, l.shape[-1])
             for l in jax.tree.leaves(tree)
             if hasattr(l, "ndim") and l.ndim >= 1
             and l.shape[-1] == STATS_WIDTH
         ]
         if not leaves:
+            return None
+        return jnp.concatenate(leaves)
+
+    def frac(cat, idx):
+        if cat is None:
             return jnp.float32(0.0)
-        cat = jnp.concatenate(leaves)
-        return jnp.mean(cat)
+        enabled = cat[:, 0] >= 0.0  # decision == -1: disabled sentinel
+        n = jnp.maximum(jnp.sum(enabled.astype(jnp.float32)), 1.0)
+        return jnp.sum(jnp.where(enabled, cat[:, idx], 0.0)) / n
 
     out = {}
     if fwd_stats is not None:
-        out["fwd_frac_bf16"] = frac(fwd_stats, 5)
-        out["fwd_rel_err"] = frac(fwd_stats, 1)
+        cat = rows(fwd_stats)
+        out["fwd_frac_bf16"] = frac(cat, 5)
+        out["fwd_rel_err"] = frac(cat, 1)
     if bwd_stats is not None:
-        out["bwd_frac_bf16"] = frac(bwd_stats, 5)
-        out["bwd_rel_err"] = frac(bwd_stats, 1)
+        cat = rows(bwd_stats)
+        out["bwd_frac_bf16"] = frac(cat, 5)
+        out["bwd_rel_err"] = frac(cat, 1)
     return out
 
 
@@ -134,8 +149,14 @@ def make_train_step(
             (g_params, total), (auxs, g_tokens) = jax.lax.scan(
                 micro, (g0, jnp.float32(0.0)), mb_batch
             )
-            aux = jax.tree.map(lambda x: x[-1], auxs)
-            g_tokens = jax.tree.map(lambda x: jnp.sum(x, 0), g_tokens)
+            # Stats/aux leaves are *per-microbatch means*: average over
+            # the scan axis. Summing the bwd token cotangents inflated
+            # bwd_frac_bf16 / bwd_rel_err by grad_accum x, and taking
+            # aux[-1] silently reported only the last microbatch's fwd
+            # stats and loss -- reported metrics must be invariant to
+            # the grad_accum split (tests/test_stats_contract.py).
+            aux = jax.tree.map(lambda x: jnp.mean(x, 0), auxs)
+            g_tokens = jax.tree.map(lambda x: jnp.mean(x, 0), g_tokens)
         else:
             total, aux, g_params, g_tokens = single_micro(
                 params, tokens, batch

@@ -64,3 +64,31 @@ def test_legacy_bare_list_rejected():
     legacy = rows_from_csv(GOOD_CSV)
     with pytest.raises(ValueError, match="must be an object"):
         validate_artifact(legacy)
+
+
+def test_v1_and_v2_versions_accepted_v3_rejected():
+    """The v2 bump keeps stored v1 history validating; unknown versions
+    stay hard errors."""
+    from benchmarks.schema import SCHEMA_V1, SCHEMA_V2
+
+    doc = make_artifact(GOOD_CSV)
+    assert doc["schema"] == SCHEMA_V2
+    validate_artifact(doc)
+    v1 = copy.deepcopy(doc)
+    v1["schema"] = SCHEMA_V1
+    validate_artifact(v1)
+    v3 = copy.deepcopy(doc)
+    v3["schema"] = "repro.bench_kernels/v3"
+    with pytest.raises(ValueError, match="schema mismatch"):
+        validate_artifact(v3)
+
+
+def test_gemm_nvfp4_row_names_fit_grammar():
+    """The v2 contract's kernel/gemm_nvfp4_* row ids parse."""
+    rows = [
+        "kernel/gemm_nvfp4_xla_512x1024x1024,12.5,"
+        "frac_nvfp4=1.00;weight_bytes_per_elt=0.563",
+        "kernel/gemm_nvfp4_pallas_512x1024x1024,0.0,"
+        "tpu_kernel_launches=1",
+    ]
+    validate_artifact(make_artifact(rows))

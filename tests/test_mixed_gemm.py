@@ -401,15 +401,17 @@ def test_mixed_gemm_kernel_lowers_for_tpu_single_launch():
     a, _ = _pack((256, 256), "checkerboard", 0, jnp.bfloat16)
     b, _ = _pack((128, 256), "checkerboard", 1, jnp.bfloat16)
 
-    def f(aq, abf, at, asc, bq, bbf, bt, bsc):
+    def f(aq, abf, anib, ams, at, asc, bq, bbf, bnib, bms, bt, bsc):
         return mixed_gemm_blocks(
-            aq, abf, at, asc, bq, bbf, bt, bsc,
+            aq, abf, anib, ams, at, asc, bq, bbf, bnib, bms, bt, bsc,
             block=(128, 128, 128), out_dtype=jnp.bfloat16,
         )
 
     txt = _tpu_lowering_text(
-        f, a.payload_q, a.payload_bf16, a.tags, a.scales,
-        b.payload_q, b.payload_bf16, b.tags, b.scales,
+        f, a.payload_q, a.payload_bf16, a.payload_nib, a.micro_scales,
+        a.tags, a.scales,
+        b.payload_q, b.payload_bf16, b.payload_nib, b.micro_scales,
+        b.tags, b.scales,
     )
     assert txt.count("tpu_custom_call") == 1
 

@@ -22,9 +22,10 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # Stats-vector columns that must be bit-identical under sharding:
-# decision, amax, frac_e4m3, frac_e5m2, frac_bf16, nonzero_frac, m_g.
+# decision, amax, frac_e4m3, frac_e5m2, frac_bf16, nonzero_frac, m_g,
+# frac_nvfp4, micro_scale_bpe (layout v2).
 # Column 1 (rel_err) is an f32 sum -> association drifts ~1 ulp.
-EXACT_COLS = "[0, 2, 3, 4, 5, 6, 7]"
+EXACT_COLS = "[0, 2, 3, 4, 5, 6, 7, 8, 9]"
 
 
 def _run(code: str, devices: int = 4) -> str:
@@ -71,8 +72,9 @@ def test_quantize_invariance_all_recipes():
     x = jnp.asarray(base, jnp.bfloat16)
 
     cases = [(rec, 'gam', 0.045) for rec in
-             ('tensor', 'sub2', 'sub3', 'e4m3')]
+             ('tensor', 'sub2', 'sub3', 'sub4', 'e4m3')]
     cases += [('sub3', 'e8m0', 0.045), ('sub3', 'fp32_amax', 0.045),
+              ('sub4', 'e8m0', 0.045),  # NVFP4 micro scales, ablation
               ('tensor', 'gam', 0.0),   # forced reject branch
               ('off', 'gam', 0.045)]    # passthrough stats
     for recipe, algo, th in cases:
@@ -99,10 +101,12 @@ def test_quantize_invariance_all_recipes():
 
         def gbody(a):
             mo, s = quantize_for_gemm(a, pol_sh)
-            return (mo.payload_q, mo.payload_bf16, mo.tags, mo.scales), s
+            return (mo.payload_q, mo.payload_bf16, mo.payload_nib,
+                    mo.micro_scales, mo.tags, mo.scales), s
         sh = P('data', None)
-        (pq2, pb2, t2, sc2), _ = jax.jit(compat_shard_map(
-            gbody, mesh, P('data', None), ((sh, sh, sh, sh), P())))(x)
+        (pq2, pb2, nib2, ms2, t2, sc2), _ = jax.jit(compat_shard_map(
+            gbody, mesh, P('data', None),
+            ((sh, sh, sh, sh, sh, sh), P())))(x)
         np.testing.assert_array_equal(np.asarray(mo1.tags), np.asarray(t2))
         np.testing.assert_array_equal(
             np.asarray(mo1.scales), np.asarray(sc2))
@@ -111,6 +115,16 @@ def test_quantize_invariance_all_recipes():
         np.testing.assert_array_equal(
             np.asarray(mo1.payload_bf16, np.float32),
             np.asarray(pb2, np.float32))
+        if recipe == 'sub4':
+            # Sub-byte lanes: packed nibbles + E4M3 micro-scale bytes
+            # are bit-identical too (micro scales derive from the
+            # allreduced group amax + shard-local block data). Other
+            # recipes carry compact don't-care lanes the out-spec
+            # concatenation mangles harmlessly -- nothing to compare.
+            np.testing.assert_array_equal(
+                np.asarray(mo1.payload_nib), np.asarray(nib2))
+            np.testing.assert_array_equal(
+                np.asarray(mo1.micro_scales), np.asarray(ms2))
         print('RECIPE OK', recipe, algo, th)
     print('ALL OK')
     """)
@@ -255,9 +269,12 @@ def test_mixed_operand_pspec_compact_replicated():
     from repro.sharding.rules import mixed_operand_pspec
 
     a = passthrough_mixed(jnp.ones((128, 128), jnp.bfloat16), (64, 64))
-    pq, pbf, tags, scales = mixed_operand_pspec(a, rows="data")
+    pq, pbf, nib, ms, tags, scales = mixed_operand_pspec(a, rows="data")
     assert pq == P(None, None)  # compact fp8 buffer: replicated
     assert pbf == P("data", None)
+    # Passthrough packs carry compact (don't-care) sub-byte lanes:
+    # replicated like any compact buffer.
+    assert nib == P(None, None) and ms == P(None, None)
     assert tags == P("data", None) and scales == P("data", None)
 
 

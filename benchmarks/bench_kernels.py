@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import subprocess
 import sys
 import tempfile
@@ -84,6 +85,39 @@ def _tpu_kernel_launches(fn, x):
     """
     txt = jax.jit(fn).trace(x).lower(lowering_platforms=("tpu",)).as_text()
     return txt.count("tpu_custom_call")
+
+
+def _tpu_lowering_text(fn, *args):
+    return jax.jit(fn).trace(*args).lower(
+        lowering_platforms=("tpu",)
+    ).as_text()
+
+
+_TENSOR_DIMS_RE = re.compile(r"tensor<([0-9]+(?:x[0-9]+)*)x[a-z]")
+
+
+def _operand_sized_stablehlo(txt, shape):
+    """Operand-sized op count in a TPU cross-lowering (stablehlo): how
+    many non-custom-call ops still touch an operand-sized buffer -- the
+    'XLA pass' count of the pallas path. Counted by element product
+    (>= half the operand), so blocked 4-D views ((nm, nk, bm, bk)
+    reshapes/transposes of the old packer) and the packed-nibble lane
+    count too, whatever their rank."""
+    thresh = shape[0] * shape[1] // 2
+    n = 0
+    for ln in txt.splitlines():
+        if ("=" not in ln or "custom_call" in ln or "func" in ln
+                or "return" in ln):
+            continue
+        best = 0
+        for m in _TENSOR_DIMS_RE.finditer(ln):
+            p = 1
+            for d in m.group(1).split("x"):
+                p *= int(d)
+            best = max(best, p)
+        if best >= thresh:
+            n += 1
+    return n
 
 
 def _three_pass_sub3(x2d):
@@ -271,6 +305,157 @@ def _bench_mixed_gemm(rows, rng, smoke: bool, recipe: str = "sub3"):
     )
 
 
+def _bench_quantize_pack(rows, rng, smoke: bool):
+    """One-pass fused quantize-to-payload vs the two-pass lowering it
+    replaced (fused select + XLA re-pack), per recipe.
+
+    The structural story lives in the TPU cross-lowering counts: the
+    fused path must be exactly **one** ``tpu_custom_call`` with **zero**
+    operand-sized XLA ops beyond what the bare selection kernel already
+    needs (the global-amax reduce; + the micro-amax segment reduce for
+    sub4) -- both asserted here so the CI bench smoke fails loudly if
+    packing ever grows an XLA pass again. Wall rows time the xla
+    lowerings (CPU hosts); the ``kernel/quantize_pack_fused_*`` /
+    ``_twopass_*`` row pair is the perf-trajectory contract consumed by
+    ``benchmarks/compare.py``.
+    """
+    from repro.core.partition import Partition
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    sizes = ((1024, 1024),) if smoke else ((1024, 1024), (4096, 1024))
+    for recipe in ("sub3", "sub4"):
+        part = Partition("block", (128, 128), align=(2, 16))
+        pol = MoRPolicy(recipe=recipe, partition="block", backend="xla")
+        pol_pl = pol.replace(backend="pallas")
+        for mkn in sizes:
+            x = (_nvfp4_friendly(rng, mkn) if recipe == "sub4"
+                 else jnp.asarray(rng.standard_normal(mkn), jnp.bfloat16))
+
+            def fused(a, pol=pol):
+                mo, stats = quantize_for_gemm(a, pol)
+                return mo.payload_q, mo.payload_bf16, stats
+
+            def two_pass(a, recipe=recipe, part=part):
+                r = kops.mor_select(a, part, recipe, "gam",
+                                    backend="xla")
+                mo = kref.pack_mixed(
+                    a, r.sel, (128, 128), "gam",
+                    group_amax=r.group_amax,
+                    with_nvfp4=(recipe == "sub4"),
+                )
+                return mo.payload_q, mo.payload_bf16
+
+            iters = 3 if smoke else 10
+            us_f = _time(jax.jit(fused), x, iters=iters)
+            us_2 = _time(jax.jit(two_pass), x, iters=iters)
+
+            def fused_pl(a, pol=pol_pl):
+                mo, stats = quantize_for_gemm(a, pol)
+                return mo.payload_q, mo.payload_bf16, stats
+
+            def select_pl(a, recipe=recipe, part=part):
+                return kops.mor_select(a, part, recipe, "gam",
+                                       backend="pallas").y
+
+            def two_pass_pl(a, recipe=recipe, part=part):
+                r = kops.mor_select(a, part, recipe, "gam",
+                                    backend="pallas")
+                mo = kref.pack_mixed(
+                    a, r.sel, (128, 128), "gam",
+                    group_amax=r.group_amax,
+                    with_nvfp4=(recipe == "sub4"),
+                )
+                return mo.payload_q, mo.payload_bf16
+
+            try:
+                txt_f = _tpu_lowering_text(fused_pl, x)
+                launches = txt_f.count("tpu_custom_call")
+                ops_f = _operand_sized_stablehlo(txt_f, x.shape)
+                ops_sel = _operand_sized_stablehlo(
+                    _tpu_lowering_text(select_pl, x), x.shape
+                )
+                ops_2 = _operand_sized_stablehlo(
+                    _tpu_lowering_text(two_pass_pl, x), x.shape
+                )
+                pack_ops = ops_f - ops_sel
+                # The acceptance contract: one fused launch, zero
+                # operand-sized XLA packing ops on top of selection.
+                assert launches == 1, (recipe, mkn, launches)
+                assert pack_ops <= 0, (recipe, mkn, pack_ops, ops_f,
+                                       ops_sel)
+                pack_ops = max(pack_ops, 0)
+                twopass_pack_ops = ops_2 - ops_sel
+            except Exception as e:  # older jax: no cross-lowering
+                if isinstance(e, AssertionError):
+                    raise
+                launches, pack_ops, twopass_pack_ops = -1, -1, -1
+            # No wall "speedup" field on purpose: on the xla backend
+            # the fused entry point IS the two-pass reference, so the
+            # walls only track host drift. The fusion's win is the
+            # structural pair (tpu_kernel_launches, tpu_pack_ops) from
+            # the TPU cross-lowering, which IS host-independent.
+            tag = f"{recipe}_{mkn[0]}x{mkn[1]}"
+            rows.append(csv_row(
+                f"kernel/quantize_pack_twopass_{tag}", us_2,
+                f"tpu_pack_ops={twopass_pack_ops};"
+                "lowering=select_kernel_plus_xla_pack",
+            ))
+            rows.append(csv_row(
+                f"kernel/quantize_pack_fused_{tag}", us_f,
+                f"tpu_kernel_launches={launches};"
+                f"tpu_pack_ops={pack_ops};"
+                "lowering=one_pass_kernel",
+            ))
+
+
+def _bench_gemm_decode_reuse(rows, rng, smoke: bool):
+    """Decode-amortization lanes: the autotuned tile per bench shape
+    (``kernel/gemm_autotune_*``) and an interpret-mode wall comparison
+    of the k-keyed decode cache / wider-bn sweep against the naive
+    revisiting grid (``kernel/gemm_decode_reuse_*``). Interpret mode
+    runs the real kernel body, so the decode-count difference is what
+    the wall clock sees on CPU."""
+    from repro.kernels.ops import GemmTile, gemm_tile_for
+
+    shapes = (((512, 512, 512), (128, 128, 128)),
+              ((256, 65536, 256), (128, 128, 128)))
+    for (M, N, K), blk in shapes:
+        n_m, n_n, n_k = M // blk[0], N // blk[1], K // blk[2]
+        t = gemm_tile_for(n_m, n_n, n_k, blk)
+        from repro.kernels.mixed_gemm import decode_cache_bytes
+        rows.append(csv_row(
+            f"kernel/gemm_autotune_{M}x{N}x{K}", 0.0,
+            f"decode_cache={int(bool(t.decode_cache))};"
+            f"bn_mult={t.bn_mult};"
+            f"cache_bytes={decode_cache_bytes(n_k, blk[0], blk[2])};"
+            f"grid={n_m}x{n_n}x{n_k}",
+        ))
+
+    # Interpret-mode decode-reuse wall clock (small, CPU-feasible).
+    pol = MoRPolicy(recipe="sub4", partition="block", backend="xla")
+    w = _nvfp4_friendly(rng, (512, 256))
+    mo, _ = quantize_for_gemm(w, pol)
+    x = jnp.asarray(rng.standard_normal((128, 256)), jnp.bfloat16)
+
+    def run(tile):
+        return _time(
+            lambda a: mixed_gemm(passthrough_mixed(a, (128, 128)), mo,
+                                 backend="interpret", tile=tile),
+            x, iters=2,
+        )
+
+    us_naive = run(GemmTile(decode_cache=False, bn_mult=1))
+    us_cache = run(GemmTile(decode_cache=True, bn_mult=1))
+    us_wide = run(GemmTile(decode_cache=False, bn_mult=4))
+    rows.append(csv_row(
+        "kernel/gemm_decode_reuse_interp_128x512x256", us_cache,
+        f"us_naive={us_naive:.1f};us_bn_mult4={us_wide:.1f};"
+        f"a_decodes_naive={(512 // 128) * (256 // 128)};"
+        f"a_decodes_cached={256 // 128}",
+    ))
+
+
 def _sharded_rows(smoke: bool):
     """Multi-device lane (>= 4 devices): the sharded mixed GEMM and the
     allreduced-stats quantization under shard_map vs their replicated
@@ -414,6 +599,12 @@ def main(smoke: bool = False, sharded: bool = True,
     # NVFP4 packed-payload serving lane (the v2 schema's gemm_nvfp4
     # rows ride in every artifact, whatever the main-lane recipe).
     _bench_nvfp4_gemm(rows, rng, smoke)
+
+    # One-pass quantize-to-payload vs the retired two-pass lowering
+    # (asserts the 1-launch / 0-pack-pass contract) + the GEMM
+    # decode-amortization lanes.
+    _bench_quantize_pack(rows, rng, smoke)
+    _bench_gemm_decode_reuse(rows, rng, smoke)
 
     # Fused mor_quantize (the XLA lowering used in train steps).
     quant_sizes = ((1024, 1024),) if smoke else ((1024, 1024), (4096, 1024))

@@ -1,0 +1,190 @@
+"""Compare two ``repro.bench_kernels`` JSON artifacts for regressions.
+
+Stdlib-only (like ``benchmarks/schema.py``): CI and developers can diff
+a fresh smoke artifact against the checked-in ``BENCH_baseline.json``
+without jax installed::
+
+    python -m benchmarks.compare benchmarks/BENCH_baseline.json \\
+        bench_kernels.json [--time-threshold 1.5] [--min-us 50]
+
+Per row (matched by name across the two artifacts) two classes of
+regression are flagged:
+
+* **time** -- ``current.us > baseline.us * time_threshold`` *and* the
+  absolute delta exceeds ``--min-us`` (wall clocks are noisy across
+  hosts; the defaults -- 2.0x / 200us -- are tuned so an identical
+  same-host rerun compares clean). Rows whose name marks them as
+  interpreter-mode or multi-device-subprocess lanes (``_interp``,
+  ``_sharded``) are *exempt* from the time check by default: their
+  wall clocks routinely swing >2x run to run, and a gate that is red
+  on every run buries the count regressions that are its real signal.
+  ``--time-all`` re-includes them.
+* **counts** -- any *structural* counter in the ``derived`` field that
+  grew: operand pass counts and fused-launch counts are deterministic
+  properties of the lowering, so *any* increase is a real regression
+  (threshold 0). Counter keys: {counter_keys}.
+
+Rows present only in the baseline are flagged as **missing** (a lane
+silently disappearing is how perf coverage rots); rows only in the
+current artifact are reported as new, never flagged.
+
+Exit status: 0 = clean (new rows / improvements allowed), 1 = at least
+one regression or missing row, 2 = usage/validation error. The CI slow
+lane runs this non-blocking (the job is advisory) but the exit code
+still lands in the log next to the uploaded artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+from .schema import validate_artifact
+
+# Derived-field keys whose values are deterministic lowering properties
+# (growth = regression at threshold 0). Wall-us keys are deliberately
+# absent: they go through the time threshold instead.
+COUNTER_KEYS = (
+    "operand_passes",
+    "tpu_kernel_launches",
+    "tpu_pack_ops",
+    "per_shard_tpu_kernel_launches",
+    "replicated_tpu_kernel_launches",
+)
+
+# Name fragments of lanes whose wall clock is interpreter- or
+# subprocess-dominated: counts still compare, times are advisory-only
+# unless --time-all.
+TIME_EXEMPT_FRAGMENTS = ("_interp", "_sharded")
+
+__doc__ = __doc__.format(counter_keys=", ".join(COUNTER_KEYS))
+
+__all__ = ["COUNTER_KEYS", "parse_derived", "compare_artifacts", "main"]
+
+
+def parse_derived(derived: str) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for item in derived.split(";"):
+        if not item:
+            continue
+        key, _, val = item.partition("=")
+        out[key.strip()] = val
+    return out
+
+
+def _load(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        doc = json.load(f)
+    validate_artifact(doc)
+    return doc
+
+
+def _int_counters(derived: str) -> Dict[str, int]:
+    out = {}
+    for key, val in parse_derived(derived).items():
+        if key not in COUNTER_KEYS:
+            continue
+        try:
+            out[key] = int(float(val))
+        except ValueError:
+            continue  # free-form text in a counter slot: not comparable
+    return out
+
+
+def compare_artifacts(
+    base: Dict[str, Any],
+    cur: Dict[str, Any],
+    time_threshold: float = 2.0,
+    min_us: float = 200.0,
+    time_all: bool = False,
+) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes) as printable strings."""
+    base_rows = {r["name"]: r for r in base["rows"]}
+    cur_rows = {r["name"]: r for r in cur["rows"]}
+    regressions: List[str] = []
+    notes: List[str] = []
+
+    for name, b in base_rows.items():
+        c = cur_rows.get(name)
+        if c is None:
+            regressions.append(f"MISSING  {name}: row dropped from lane")
+            continue
+        time_eligible = time_all or not any(
+            frag in name for frag in TIME_EXEMPT_FRAGMENTS
+        )
+        if (
+            time_eligible
+            and b["us"] > 0
+            and c["us"] > b["us"] * time_threshold
+            and c["us"] - b["us"] > min_us
+        ):
+            regressions.append(
+                f"TIME     {name}: {c['us']:.1f}us vs baseline "
+                f"{b['us']:.1f}us ({c['us'] / b['us']:.2f}x > "
+                f"{time_threshold:.2f}x)"
+            )
+        bc, cc = _int_counters(b["derived"]), _int_counters(c["derived"])
+        for key in sorted(set(bc) & set(cc)):
+            if bc[key] < 0 or cc[key] < 0:
+                continue  # -1 sentinel: lane unavailable on that host
+            if cc[key] > bc[key]:
+                regressions.append(
+                    f"COUNT    {name}: {key} {cc[key]} vs baseline "
+                    f"{bc[key]}"
+                )
+            elif cc[key] < bc[key]:
+                notes.append(
+                    f"improved {name}: {key} {cc[key]} vs baseline "
+                    f"{bc[key]}"
+                )
+    for name in sorted(set(cur_rows) - set(base_rows)):
+        notes.append(f"new row  {name}")
+    return regressions, notes
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.compare",
+        description="Flag per-row time/count regressions between two "
+                    "bench_kernels JSON artifacts.",
+    )
+    ap.add_argument("baseline", help="baseline artifact (e.g. "
+                                     "benchmarks/BENCH_baseline.json)")
+    ap.add_argument("current", help="freshly produced artifact")
+    ap.add_argument("--time-threshold", type=float, default=2.0,
+                    help="flag when current/baseline us exceeds this "
+                         "ratio (default 2.0)")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="absolute wall-delta floor below which time "
+                         "ratios are ignored (default 200us)")
+    ap.add_argument("--time-all", action="store_true",
+                    help="also apply the time check to interpreter/"
+                         "sharded lanes (exempt by default)")
+    args = ap.parse_args(argv)
+    try:
+        base = _load(args.baseline)
+        cur = _load(args.current)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"compare: cannot load artifacts: {e}", file=sys.stderr)
+        return 2
+    regressions, notes = compare_artifacts(
+        base, cur, args.time_threshold, args.min_us, args.time_all
+    )
+    for line in notes:
+        print(line)
+    for line in regressions:
+        print(line)
+    matched = len(
+        {r["name"] for r in base["rows"]}
+        & {r["name"] for r in cur["rows"]}
+    )
+    print(
+        f"compared {matched} matched rows: "
+        f"{len(regressions)} regression(s), {len(notes)} note(s)"
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

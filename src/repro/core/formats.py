@@ -171,15 +171,25 @@ def encode_e2m1(v: jnp.ndarray) -> jnp.ndarray:
     return code | (sign << 3)
 
 
-def decode_e2m1(code: jnp.ndarray) -> jnp.ndarray:
-    """4-bit E2M1 codes (int) -> f32 grid values. Select-only (kernel-safe)."""
+def decode_e2m1(code: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """4-bit E2M1 codes (int) -> grid values. Select-only (kernel-safe).
+
+    ``dtype`` is the arithmetic/output dtype: every E2M1 grid value
+    (and its sign flip) is exact in bf16 and wider, so a bf16 decode is
+    bit-identical to the f32 one after any downstream cast -- the GEMM
+    kernel decodes straight to the storage dtype at half the vector
+    register width.
+    """
     c = code.astype(jnp.int32)
     m = c & 7
     mag = jnp.where(
         m < 4,
-        m.astype(jnp.float32) * 0.5,
-        (1.0 + 0.5 * (m & 1).astype(jnp.float32))
-        * jnp.where(m >= 6, 4.0, 2.0),
+        m.astype(dtype) * jnp.asarray(0.5, dtype),
+        (jnp.asarray(1.0, dtype)
+         + jnp.asarray(0.5, dtype) * (m & 1).astype(dtype))
+        * jnp.where(
+            m >= 6, jnp.asarray(4.0, dtype), jnp.asarray(2.0, dtype)
+        ),
     )
     return jnp.where((c >> 3) == 1, -mag, mag)
 

@@ -157,6 +157,47 @@ def _tensor_level(x2d: jnp.ndarray, policy: MoRPolicy):
     return y, stats, tags
 
 
+def _sub_tensor_stats(r, policy: MoRPolicy, x_size: int) -> jnp.ndarray:
+    """Aggregate one sub-tensor selection event (``MorSelect``-shaped
+    ``r``) into the STATS_WIDTH vector -- shared by the fake-quant and
+    the one-pass real-pack paths, which therefore can never disagree on
+    a stats row."""
+    axes = policy.mesh_axes
+    nblocks = psum_over(jnp.float32(r.sel.size), axes)
+    nz = psum_over(jnp.sum(r.counts), axes) / global_size(x_size, axes)
+    tot_n = jnp.maximum(psum_over(jnp.sum(r.counts), axes), 1.0)
+    global_e4_err = psum_over(jnp.sum(r.e4_sums), axes) / tot_n
+    f4 = psum_over(
+        jnp.sum((r.sel == 0).astype(jnp.float32)), axes
+    ) / nblocks
+
+    if policy.recipe == "sub2":
+        return _stats(
+            f4, global_e4_err, r.group_amax, f4, 0.0, 1.0 - f4, nz,
+            r.group_mantissa,
+        )
+
+    f5 = psum_over(
+        jnp.sum((r.sel == 1).astype(jnp.float32)), axes
+    ) / nblocks
+    if policy.recipe == "sub3":
+        return _stats(
+            f4, global_e4_err, r.group_amax, f4, f5, 1.0 - f4 - f5, nz,
+            r.group_mantissa,
+        )
+
+    # sub4: the preferred format is NVFP4; decision = frac_nvfp4 and the
+    # micro-scale byte overhead rides in the new stats lane.
+    f_nv = psum_over(
+        jnp.sum((r.sel == TAG_NVFP4).astype(jnp.float32)), axes
+    ) / nblocks
+    return _stats(
+        f_nv, global_e4_err, r.group_amax, f4, f5,
+        1.0 - f4 - f5 - f_nv, nz, r.group_mantissa,
+        f_nv, f_nv / _kref.NVFP4_MICRO,
+    )
+
+
 def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
     """Sub-tensor MoR (§3.2 + sub4): two/three/four-way per-block choice.
 
@@ -165,48 +206,12 @@ def _sub_tensor(x2d: jnp.ndarray, policy: MoRPolicy):
     gates -- runs in one fused pass per block (`kops.mor_select`); only
     the stats aggregation lives here.
     """
-    axes = policy.mesh_axes
     part = partition_of(policy)
     r = kops.mor_select(
         x2d, part, mode=policy.recipe, algo=policy.algo,
-        backend=policy.backend, mesh_axes=axes,
+        backend=policy.backend, mesh_axes=policy.mesh_axes,
     )
-    nblocks = psum_over(jnp.float32(r.sel.size), axes)
-    nz = psum_over(jnp.sum(r.counts), axes) / global_size(x2d.size, axes)
-    tot_n = jnp.maximum(psum_over(jnp.sum(r.counts), axes), 1.0)
-    global_e4_err = psum_over(jnp.sum(r.e4_sums), axes) / tot_n
-    f4 = psum_over(
-        jnp.sum((r.sel == 0).astype(jnp.float32)), axes
-    ) / nblocks
-
-    if policy.recipe == "sub2":
-        stats = _stats(
-            f4, global_e4_err, r.group_amax, f4, 0.0, 1.0 - f4, nz,
-            r.group_mantissa,
-        )
-        return r.y, stats, r.sel
-
-    f5 = psum_over(
-        jnp.sum((r.sel == 1).astype(jnp.float32)), axes
-    ) / nblocks
-    if policy.recipe == "sub3":
-        stats = _stats(
-            f4, global_e4_err, r.group_amax, f4, f5, 1.0 - f4 - f5, nz,
-            r.group_mantissa,
-        )
-        return r.y, stats, r.sel
-
-    # sub4: the preferred format is NVFP4; decision = frac_nvfp4 and the
-    # micro-scale byte overhead rides in the new stats lane.
-    f_nv = psum_over(
-        jnp.sum((r.sel == TAG_NVFP4).astype(jnp.float32)), axes
-    ) / nblocks
-    stats = _stats(
-        f_nv, global_e4_err, r.group_amax, f4, f5,
-        1.0 - f4 - f5 - f_nv, nz, r.group_mantissa,
-        f_nv, f_nv / _kref.NVFP4_MICRO,
-    )
-    return r.y, stats, r.sel
+    return r.y, _sub_tensor_stats(r, policy, x2d.size), r.sel
 
 
 def _static_e4m3(x2d: jnp.ndarray, policy: MoRPolicy):
@@ -306,11 +311,14 @@ def quantize_for_gemm(
     Only 'block' partitioning maps onto the GEMM tiling; other
     partition kinds must keep the fake-quantization path.
 
-    Perf note: packing currently re-derives block scales and fp8 bits in
-    XLA after the selection pass (the selection kernel computed both
-    candidates in-register but only writes the winner + stats).
-    Emitting payloads directly from the selection kernel is the local
-    follow-up that removes this extra pass (kernels/README.md).
+    Sub-tensor recipes (sub2/sub3/sub4) are *one pass*: the fused
+    selection kernel emits the payload lanes, tags and GAM scales
+    directly (``kops.quantize_pack``), so on the pallas backend the
+    whole event is a single ``tpu_custom_call`` with no operand-sized
+    XLA packing pass. The one-format recipes ('tensor', 'e4m3') keep
+    the select-then-pack lowering: the tensor-level accept/reject is a
+    *global* reduction over every block's error, which no single
+    in-register block pass can decide.
 
     Under ``policy.mesh_axes`` (inside shard_map) the pack receives the
     allreduced group amax, so a shard packs exactly the payload bytes,
@@ -346,6 +354,15 @@ def quantize_for_gemm(
             f"block; policy block_shape {policy.block_shape} resolved "
             f"to {block} for operand {tuple(x2d.shape)}"
         )
+    if policy.recipe in ("sub2", "sub3", "sub4"):
+        # One fused pass: selection + payload emission in the same
+        # kernel (bit-identical to the two-pass select + pack_mixed
+        # oracle; tests/test_quantize_pack.py).
+        mo, r = kops.quantize_pack(
+            x2d, part, mode=policy.recipe, algo=policy.algo,
+            backend=policy.backend, mesh_axes=policy.mesh_axes,
+        )
+        return mo, _sub_tensor_stats(r, policy, x2d.size)
     _, stats, tags = _decide(x2d, policy)
     # stats[2] is the group amax the decision path used -- already
     # allreduced under mesh_axes -- so the pack's Alg. 1 scales can

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import functools
 import os
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +30,11 @@ from . import ref as _ref
 from .flash_attention import flash_attention_fwd
 from .fp8_gemm import fp8_gemm as _fp8_gemm_kernel
 from .gam_quant import gam_quant_blocks
-from .mixed_gemm import mixed_gemm_blocks
+from .mixed_gemm import (
+    DECODE_CACHE_BUDGET,
+    decode_cache_bytes,
+    mixed_gemm_blocks,
+)
 from .mor_select import mor_select_blocks
 from .ref import MixedOperand, MorSelect, QuantErr
 
@@ -37,12 +42,16 @@ __all__ = [
     "gam_quant",
     "quant_err",
     "mor_select",
+    "quantize_pack",
     "fp8_gemm",
     "mixed_gemm",
     "mixed_dot",
     "sharded_mixed_gemm",
     "flash_attention",
     "resolve_backend",
+    "GemmTile",
+    "gemm_tile_for",
+    "register_gemm_tile",
     "QuantErr",
     "MorSelect",
     "MixedOperand",
@@ -138,6 +147,29 @@ def quant_err(
     )
 
 
+def _select_kernel_call(x, block, mode, algo, emit, be, mesh_axes):
+    """Shared prologue + launch for both selection entry points: pad,
+    one global amax reduce (allreduced when sharded), the per-format
+    Alg. 1 mantissas, and the kernel call. One definition so the
+    fake-quant and pack-emitting paths can never drift on scaling
+    inputs. Returns (kernel outputs, group_amax, E4M3 mantissa)."""
+    bm, bk = block
+    xp = _pad2d(x, bm, bk)
+    g_amax, safe_g = _group_amax(x, mesh_axes)
+    mg4 = _group_mantissa(safe_g, E4M3, algo)
+    mg5 = _group_mantissa(safe_g, E5M2, algo)
+    mgnv = _group_mantissa(safe_g, NVFP4, algo)
+    out = mor_select_blocks(
+        xp, jnp.stack([mg4, mg5, mgnv]), safe_g,
+        block=block, q_amax4=E4M3.amax, q_amax5=E5M2.amax,
+        q_amax_nv=NVFP4.amax, dt4=E4M3.dtype, dt5=E5M2.dtype, mode=mode,
+        algo=algo, range_ratio=E5M2_RANGE_RATIO,
+        nv_range_ratio=NVFP4_RANGE_RATIO, emit=emit,
+        interpret=(be == "interpret"),
+    )
+    return out, g_amax, mg4
+
+
 def mor_select(
     x: jnp.ndarray,
     part: Partition,
@@ -169,17 +201,8 @@ def mor_select(
         be = "xla"
     if be == "xla":
         return _ref.mor_select_ref(x, part, mode, algo, mesh_axes=mesh_axes)
-    xp = _pad2d(x, bm, bk)
-    g_amax, safe_g = _group_amax(x, mesh_axes)
-    mg4 = _group_mantissa(safe_g, E4M3, algo)
-    mg5 = _group_mantissa(safe_g, E5M2, algo)
-    mgnv = _group_mantissa(safe_g, NVFP4, algo)
-    out = mor_select_blocks(
-        xp, jnp.stack([mg4, mg5, mgnv]),
-        block=(bm, bk), q_amax4=E4M3.amax, q_amax5=E5M2.amax,
-        q_amax_nv=NVFP4.amax, dt4=E4M3.dtype, dt5=E5M2.dtype, mode=mode,
-        algo=algo, range_ratio=E5M2_RANGE_RATIO,
-        nv_range_ratio=NVFP4_RANGE_RATIO, interpret=(be == "interpret"),
+    out, g_amax, mg4 = _select_kernel_call(
+        x, (bm, bk), mode, algo, "select", be, mesh_axes
     )
     y, sel, e4_sums, e5_sums, counts = out[:5]
     return MorSelect(
@@ -192,6 +215,81 @@ def mor_select(
         group_mantissa=mg4,
         nv_sums=out[5] if mode == "sub4" else None,
     )
+
+
+def quantize_pack(
+    x: jnp.ndarray,
+    part: Partition,
+    mode: str = "sub3",
+    algo: str = "gam",
+    *,
+    backend: str = "auto",
+    mesh_axes=(),
+):
+    """One-pass fused sub-tensor selection *and* real packing.
+
+    The pack-emitting variant of :func:`mor_select`: the same single
+    VMEM pass per block that makes the §3.2 decision also writes the
+    winner's real payload -- fp8 bit patterns, BF16 passthrough values,
+    per-block GAM scales, and for ``mode='sub4'`` the packed E2M1
+    nibbles + E4M3 micro-scale bytes -- so ``quantize_for_gemm`` no
+    longer re-derives block amaxes / Alg. 1 scales / payload bits in a
+    second XLA pass over the operand. Byte-identical to
+    ``ref.pack_mixed`` on the selection's tags (the two-pass lowering
+    stays as the ``backend='xla'`` oracle, ``ref.quantize_pack_ref``).
+
+    Returns ``(MixedOperand, MorSelect)``; the MorSelect carries the
+    per-block error sums / counts / group scalars the recipe layer
+    aggregates into the stats vector, with ``y=None`` (real
+    quantization never materializes the fake-quant output).
+
+    ``mesh_axes`` as in :func:`mor_select`: the group amax (and with
+    it every Alg. 1 scale and micro scale) is allreduced first, so a
+    shard packs exactly the bytes its blocks would get on one device.
+    """
+    be = _kernel_backend(backend, part)
+    M, K = x.shape
+    bm, bk = part.resolve(x.shape)
+    if mode == "sub4" and (bk % NVFP4_MICRO or bm % 2):
+        # Nibble packing pairs rows and micro-blocks need 16-divisible
+        # contraction blocks; the sub4 recipe's aligned partition
+        # guarantees both, direct callers with exotic blocks take the
+        # XLA path (whose packer raises on truly incapable blocks).
+        be = "xla"
+    if be == "xla":
+        return _ref.quantize_pack_ref(x, part, mode, algo,
+                                      mesh_axes=mesh_axes)
+    out, g_amax, mg4 = _select_kernel_call(
+        x, (bm, bk), mode, algo, "pack", be, mesh_axes
+    )
+    if mode == "sub4":
+        (pq, pbf, sel, scales, e4_sums, e5_sums, counts, nv_sums,
+         nib, ms) = out
+    else:
+        pq, pbf, sel, scales, e4_sums, e5_sums, counts = out
+        nv_sums, nib, ms = None, None, None
+    mo = MixedOperand(
+        payload_q=pq,
+        payload_bf16=pbf,
+        tags=sel,
+        scales=scales,
+        block=(bm, bk),
+        shape=(M, K),
+        payload_nib=nib,
+        micro_scales=ms,
+        has_nvfp4=(mode == "sub4"),
+    )
+    r = MorSelect(
+        y=None,
+        sel=sel,
+        e4_sums=e4_sums,
+        e5_sums=e5_sums,
+        counts=counts,
+        group_amax=g_amax,
+        group_mantissa=mg4,
+        nv_sums=nv_sums,
+    )
+    return mo, r
 
 
 def gam_quant(
@@ -232,25 +330,88 @@ def fp8_gemm(a_q, b_q, a_scale, b_scale, *, block=(128, 128, 128),
     )
 
 
+class GemmTile(NamedTuple):
+    """Static tiling knobs for one mixed-GEMM launch.
+
+    decode_cache: use the k-keyed VMEM cache for the A decode (None =
+                  the kernel's fit-based auto rule).
+    bn_mult:      B row blocks per kernel step (the wider-bn sweep; 1 =
+                  one pack block per tile).
+    """
+
+    decode_cache: Optional[bool] = None
+    bn_mult: int = 1
+
+
+# Shape-keyed block-size autotune table consulted by :func:`mixed_gemm`:
+# (n_m, n_n, n_k) block-grid key -> GemmTile. Seeded from the bench
+# lanes (benchmarks/bench_kernels.py records the chosen tile per row);
+# anything absent falls through to gemm_tile_for's heuristic. Extend
+# with register_gemm_tile.
+_GEMM_TILE_TABLE: dict = {}
+
+
+def register_gemm_tile(n_m: int, n_n: int, n_k: int, tile: GemmTile):
+    """Pin the tile for one block-grid shape (overrides the heuristic)."""
+    _GEMM_TILE_TABLE[(n_m, n_n, n_k)] = tile
+
+
+def gemm_tile_for(
+    n_m: int, n_n: int, n_k: int, block, tile: Optional[GemmTile] = None
+) -> GemmTile:
+    """Resolve the tile for a (n_m, n_n, n_k) block grid.
+
+    Explicit ``tile`` wins, then the registered table, then the
+    heuristic: prefer the decode cache whenever its (n_k, bm, bk) f32
+    stripe store fits the VMEM budget; otherwise sweep a wider N tile
+    (largest bn_mult in {4, 2} dividing n_n with bn * bn_mult <= 512)
+    so the A decode still amortizes without scratch.
+    """
+    if tile is not None:
+        return tile
+    hit = _GEMM_TILE_TABLE.get((n_m, n_n, n_k))
+    if hit is not None:
+        return hit
+    bm, bn, bk = block
+    if n_n <= 1:
+        return GemmTile(decode_cache=False, bn_mult=1)
+    if decode_cache_bytes(n_k, bm, bk) <= DECODE_CACHE_BUDGET:
+        return GemmTile(decode_cache=True, bn_mult=1)
+    bn_mult = next(
+        (m for m in (4, 2) if n_n % m == 0 and bn * m <= 512), 1
+    )
+    return GemmTile(decode_cache=False, bn_mult=bn_mult)
+
+
 def mixed_gemm(
     a: MixedOperand,
     b: MixedOperand,
     *,
     out_dtype=jnp.bfloat16,
     backend: str = "auto",
+    tile: Optional[GemmTile] = None,
 ) -> jnp.ndarray:
     """Mixed-representation block GEMM: C = A @ B^T, unpadded (M, N).
 
     Both operands arrive in their quantization view (rows x contraction,
     see :class:`~repro.kernels.ref.MixedOperand`); every block is decoded
-    per its tag (E4M3 / E5M2 / BF16 passthrough) in-register and the
-    product is f32-accumulated -- one fused kernel launch on TPU versus
-    the dequantize-then-bf16-matmul lowering it replaces.
+    per its tag (E4M3 / E5M2 / BF16 passthrough / NVFP4) in-register and
+    the product is f32-accumulated -- one fused kernel launch on TPU
+    versus the dequantize-then-bf16-matmul lowering it replaces. The
+    per-(i, k) A decode is amortized across the N sweep (VMEM cache or
+    wider-bn tile, :func:`gemm_tile_for`); ``tile`` overrides the
+    autotune table end to end (``mixed_dot``/``qdot`` pass it through).
     """
     be = resolve_backend(backend)
     if be == "xla":
         return _ref.mixed_gemm_ref(a, b, out_dtype)
     assert a.block[1] == b.block[1], (a.block, b.block)
+    n_m, n_k = a.tags.shape
+    n_n = b.tags.shape[0]
+    cfg = gemm_tile_for(
+        n_m, n_n, n_k, (a.block[0], b.block[0], a.block[1]), tile
+    )
+    bn_mult = cfg.bn_mult if n_n % max(cfg.bn_mult, 1) == 0 else 1
     out = mixed_gemm_blocks(
         a.payload_q, a.payload_bf16, a.payload_nib, a.micro_scales,
         a.tags, a.scales,
@@ -259,6 +420,10 @@ def mixed_gemm(
         block=(a.block[0], b.block[0], a.block[1]),
         out_dtype=out_dtype,
         interpret=(be == "interpret"),
+        a_has_nvfp4=a.has_nvfp4,
+        b_has_nvfp4=b.has_nvfp4,
+        decode_cache=cfg.decode_cache,
+        bn_mult=max(bn_mult, 1),
     )
     return out[: a.shape[0], : b.shape[0]]
 
@@ -269,6 +434,7 @@ def mixed_dot(
     *,
     out_dtype=jnp.bfloat16,
     backend: str = "auto",
+    tile: Optional[GemmTile] = None,
 ) -> jnp.ndarray:
     """x2 @ W^T for an unquantized (M, K) activation against a mixed
     (N, K)-view operand: the shared serving wrapper behind ``qdot``,
@@ -279,20 +445,23 @@ def mixed_dot(
     a = _ref.passthrough_mixed(
         x2, (_ref.activation_row_block(x2.shape[0], bk), bk)
     )
-    return mixed_gemm(a, mo, out_dtype=out_dtype, backend=backend)
+    return mixed_gemm(a, mo, out_dtype=out_dtype, backend=backend,
+                      tile=tile)
 
 
-def _local_mixed(payload_q, payload_bf16, nib, ms, tags, scales, block):
+def _local_mixed(payload_q, payload_bf16, nib, ms, tags, scales, block,
+                 has_nvfp4):
     """Rebuild a shard-local MixedOperand from shard_map-sliced leaves.
 
     The local logical shape is the local *padded* shape: per-shard
     padding blocks decode to zeros (zero payloads under scale 1.0), so
     they contribute nothing to the product and the caller slices the
-    assembled global output back to the logical (M, N) once.
+    assembled global output back to the logical (M, N) once. The static
+    ``has_nvfp4`` hint survives the leaf round-trip via closure.
     """
     shape = (tags.shape[-2] * block[0], tags.shape[-1] * block[1])
     return MixedOperand(payload_q, payload_bf16, tags, scales, block,
-                        shape, nib, ms)
+                        shape, nib, ms, has_nvfp4)
 
 
 def sharded_mixed_gemm(
@@ -358,11 +527,12 @@ def sharded_mixed_gemm(
     b_specs = mixed_operand_pspec(b, col_axis, contract_axis)
     inner_dtype = jnp.float32 if contract_axis else out_dtype
     block_a, block_b = a.block, b.block
+    nv_a, nv_b = a.has_nvfp4, b.has_nvfp4
 
     def body(aq, abf, anib, ams, at, asc, bq, bbf, bnib, bms, bt, bsc):
         out = mixed_gemm(
-            _local_mixed(aq, abf, anib, ams, at, asc, block_a),
-            _local_mixed(bq, bbf, bnib, bms, bt, bsc, block_b),
+            _local_mixed(aq, abf, anib, ams, at, asc, block_a, nv_a),
+            _local_mixed(bq, bbf, bnib, bms, bt, bsc, block_b, nv_b),
             out_dtype=inner_dtype,
             backend=backend,
         )

@@ -51,6 +51,7 @@ __all__ = [
     "gam_quant_ref",
     "quant_err_ref",
     "mor_select_ref",
+    "quantize_pack_ref",
     "fp8_gemm_ref",
     "flash_attention_ref",
 ]
@@ -177,6 +178,12 @@ class MixedOperand:
                   NVFP4 *block* scale for TAG_NVFP4 blocks).
     block:        (br, bk) static block shape.
     shape:        (R, K) static logical (unpadded) shape.
+    has_nvfp4:    static tri-state hint for the GEMM kernel's NVFP4
+                  decode: False = no block can be TAG_NVFP4 (skip the
+                  decode even when a compact sub-byte lane's shape
+                  coincides with the full one -- single-block
+                  operands), True = TAG_NVFP4 blocks may be present,
+                  None = unknown (legacy packs; shape heuristic).
 
     Any payload lane may be *compact*: collapsed to one don't-care
     block when no (concrete) tag references it -- see :meth:`compact`.
@@ -193,6 +200,7 @@ class MixedOperand:
     shape: Tuple[int, int]
     payload_nib: jnp.ndarray = None
     micro_scales: jnp.ndarray = None
+    has_nvfp4: bool | None = None
 
     def __post_init__(self):
         # Sub-byte lanes are optional at construction (pre-NVFP4 call
@@ -213,14 +221,15 @@ class MixedOperand:
         return (
             (self.payload_q, self.payload_bf16, self.tags, self.scales,
              self.payload_nib, self.micro_scales),
-            (self.block, self.shape),
+            (self.block, self.shape, self.has_nvfp4),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         pq, pbf, tags, scales, nib, ms = children
-        block, shape = aux
-        return cls(pq, pbf, tags, scales, block, shape, nib, ms)
+        block, shape, has_nvfp4 = aux
+        return cls(pq, pbf, tags, scales, block, shape, nib, ms,
+                   has_nvfp4)
 
     @property
     def padded_shape(self) -> Tuple[int, int]:
@@ -235,11 +244,15 @@ class MixedOperand:
         """Drop every payload lane no tag references down to a single
         don't-care block. Host-side only (needs concrete tags); leading
         stack axes (layer-stacked serving weights) are preserved so
-        ``lax.scan`` slicing keeps working."""
+        ``lax.scan`` slicing keeps working. The ``has_nvfp4`` hint is
+        refined to the concrete truth while we are looking at the
+        tags."""
         tags = np.asarray(self.tags)
         br, bk = self.block
         lead = self.payload_q.shape[:-2]
-        out = self
+        out = dataclasses.replace(
+            self, has_nvfp4=bool((tags == TAG_NVFP4).any())
+        )
         is_fp8 = (tags == TAG_E4M3) | (tags == TAG_E5M2)
         if not is_fp8.any():
             out = dataclasses.replace(
@@ -305,6 +318,7 @@ class MixedOperand:
             # compact blocks in the transposed geometry.
             payload_nib=jnp.zeros(_nib_compact_shape(blockT), jnp.uint8),
             micro_scales=jnp.zeros(_ms_compact_shape(blockT), jnp.uint8),
+            has_nvfp4=False,
         )
 
     def dequant(self) -> jnp.ndarray:
@@ -427,6 +441,7 @@ def pack_mixed(
         shape=tuple(x2d.shape),
         payload_nib=payload_nib,
         micro_scales=micro_scales,
+        has_nvfp4=with_nvfp4,
     )
 
 
@@ -447,6 +462,7 @@ def passthrough_mixed(
         scales=jnp.ones((nr, nk), jnp.float32),
         block=(br, bk),
         shape=tuple(x2d.shape),
+        has_nvfp4=False,
     )
 
 
@@ -691,6 +707,26 @@ def mor_select_ref(
         group_mantissa=scales4.group_mantissa,
         nv_sums=nv_sums,
     )
+
+
+def quantize_pack_ref(
+    x: jnp.ndarray, part: Partition, mode: str = "sub3",
+    algo: str = "gam", mesh_axes=(),
+) -> Tuple[MixedOperand, MorSelect]:
+    """Reference for ops.quantize_pack: the two-pass lowering (fused
+    selection, then the XLA packer over the selection's tags). This is
+    the bit-exactness oracle for the pack-emitting kernel: payload
+    bytes, nibbles, micro-scale bytes, tags and GAM scales must all
+    match. The returned MorSelect carries ``y=None`` -- real
+    quantization never materializes the fake-quant output."""
+    r = mor_select_ref(x, part, mode, algo, mesh_axes=mesh_axes)
+    block = part.resolve(x.shape)
+    mo = pack_mixed(
+        x, r.sel, block, algo,
+        group_amax=r.group_amax,
+        with_nvfp4=(mode == "sub4"),
+    )
+    return mo, r._replace(y=None)
 
 
 def gam_quant_ref(

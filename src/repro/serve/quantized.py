@@ -159,6 +159,7 @@ def _layer_mo(mo: MixedOperand, l: int) -> MixedOperand:
         shape=mo.shape,
         payload_nib=sl(mo.payload_nib),
         micro_scales=sl(mo.micro_scales),
+        has_nvfp4=mo.has_nvfp4,
     )
 
 
@@ -221,13 +222,15 @@ def quantize_weight_stacked(
     }
 
 
-def qdot(x: jnp.ndarray, qw: QTensor, *, backend: str = "auto"
-         ) -> jnp.ndarray:
+def qdot(x: jnp.ndarray, qw: QTensor, *, backend: str = "auto",
+         tile=None) -> jnp.ndarray:
     """x @ W for a (single-matrix) sub-tensor QTensor weight.
 
     The activation is wrapped as an all-BF16 pack and both operands go
     through the mixed-representation block GEMM -- a single fused kernel
     launch per GEMM on TPU, the jnp reference under ``backend='xla'``.
+    ``tile`` (a ``kernels.ops.GemmTile``) overrides the GEMM's
+    decode-amortization autotune for this weight's shape.
 
     >>> import jax.numpy as jnp
     >>> from repro.core import MoRPolicy
@@ -247,7 +250,8 @@ def qdot(x: jnp.ndarray, qw: QTensor, *, backend: str = "auto"
             "host-side first)"
         )
     x2, lead = x.reshape(-1, x.shape[-1]), x.shape[:-1]
-    y = kops.mixed_dot(x2, qw.mo, out_dtype=x.dtype, backend=backend)
+    y = kops.mixed_dot(x2, qw.mo, out_dtype=x.dtype, backend=backend,
+                       tile=tile)
     return y.reshape(*lead, qw.shape[1])
 
 

@@ -273,10 +273,13 @@ def qtensor_pspec_from_dense(qt, dense_spec: P, mesh: Optional[Mesh] = None):
     pq, pbf, nib, ms, tags, scales = mixed_operand_pspec(
         qt.mo, rows=a_n, cols=a_k
     )
+    # The spec pytree must share the value pytree's static aux data
+    # (including the has_nvfp4 hint) or tree_map over (params, specs)
+    # rejects the pair as structure-mismatched.
     mo_spec = MixedOperand(
         payload_q=pq, payload_bf16=pbf, tags=tags, scales=scales,
         block=qt.mo.block, shape=qt.mo.shape,
-        payload_nib=nib, micro_scales=ms,
+        payload_nib=nib, micro_scales=ms, has_nvfp4=qt.mo.has_nvfp4,
     )
     stats_spec = P(*([None] * qt.stats.ndim))
     return QTensor(mo=mo_spec, stats=stats_spec, shape=qt.shape)

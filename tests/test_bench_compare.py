@@ -1,0 +1,166 @@
+"""benchmarks/compare.py: the perf-regression comparator (stdlib-only,
+like the schema validator it builds on)."""
+import copy
+import json
+
+import pytest
+
+from benchmarks.compare import (
+    COUNTER_KEYS,
+    compare_artifacts,
+    main,
+    parse_derived,
+)
+from benchmarks.schema import SCHEMA, make_artifact
+
+BASE_CSV = [
+    "kernel/quantize_pack_fused_sub3_1024x1024,100.0,"
+    "tpu_kernel_launches=1;tpu_pack_ops=0;us_twopass_xla=120.0",
+    "kernel/gemm_mixed_pallas_512x512x512,0.0,"
+    "tpu_kernel_launches=1;legacy_operand_passes=6",
+    "kernel/sub3_fused_xla_1024x1024,200.0,"
+    "hbm_bytes=86028876;operand_passes=33;speedup=1.34x",
+]
+
+
+def _artifact(csv_rows):
+    return make_artifact(csv_rows)
+
+
+def test_parse_derived():
+    d = parse_derived("a=1;b=two;speedup=1.34x;;c=")
+    assert d == {"a": "1", "b": "two", "speedup": "1.34x", "c": ""}
+
+
+def test_identical_artifacts_clean():
+    base = _artifact(BASE_CSV)
+    regs, notes = compare_artifacts(base, copy.deepcopy(base))
+    assert regs == [] and notes == []
+
+
+def test_count_regression_flagged_at_zero_threshold():
+    base = _artifact(BASE_CSV)
+    cur = copy.deepcopy(base)
+    cur["rows"][0]["derived"] = (
+        "tpu_kernel_launches=2;tpu_pack_ops=5;us_twopass_xla=120.0"
+    )
+    regs, _ = compare_artifacts(base, cur)
+    assert len(regs) == 2  # both counters grew
+    assert any("tpu_kernel_launches 2" in r for r in regs)
+    assert any("tpu_pack_ops 5" in r for r in regs)
+
+
+def test_count_improvement_is_a_note_not_a_regression():
+    base = _artifact(BASE_CSV)
+    cur = copy.deepcopy(base)
+    cur["rows"][2]["derived"] = (
+        "hbm_bytes=86028876;operand_passes=3;speedup=10x"
+    )
+    regs, notes = compare_artifacts(base, cur)
+    assert regs == []
+    assert any("operand_passes 3" in n for n in notes)
+
+
+def test_time_regression_needs_ratio_and_absolute_floor():
+    base = _artifact(BASE_CSV)
+    cur = copy.deepcopy(base)
+    # 5x on a 100us row: above the default 2.0 ratio and the 200us
+    # floor -> flagged; suppressed when the floor exceeds the delta.
+    cur["rows"][0]["us"] = 500.0
+    regs, _ = compare_artifacts(base, cur)
+    assert any(r.startswith("TIME") for r in regs)
+    regs, _ = compare_artifacts(base, cur, min_us=500.0)
+    assert regs == []
+    # Ratio below threshold: never flagged however large the delta.
+    cur["rows"][0]["us"] = 180.0
+    regs, _ = compare_artifacts(base, cur)
+    assert regs == []
+
+
+def test_interp_and_sharded_lanes_exempt_from_time_check():
+    """Interpreter/subprocess wall clocks swing >2x run to run; their
+    rows compare on counts only (unless time_all) so the advisory gate
+    is not red on every rerun."""
+    base = _artifact([
+        "kernel/mor_select_interp_512,2952.8,mode=interpret",
+        "kernel/gemm_sharded_row_data4_512x512x512,1360.8,"
+        "devices=4;per_shard_tpu_kernel_launches=1",
+    ])
+    cur = copy.deepcopy(base)
+    cur["rows"][0]["us"] = 9000.0
+    cur["rows"][1]["us"] = 9000.0
+    assert compare_artifacts(base, cur) == ([], [])
+    regs, _ = compare_artifacts(base, cur, time_all=True)
+    assert len(regs) == 2
+    # Count regressions still flag on exempt lanes.
+    cur["rows"][1]["derived"] = "devices=4;per_shard_tpu_kernel_launches=2"
+    regs, _ = compare_artifacts(base, cur)
+    assert len(regs) == 1 and "per_shard_tpu_kernel_launches" in regs[0]
+
+
+def test_missing_row_flagged_new_row_noted():
+    base = _artifact(BASE_CSV)
+    cur = _artifact(BASE_CSV[:2] + [
+        "kernel/brand_new_lane,1.0,tpu_kernel_launches=1",
+    ])
+    regs, notes = compare_artifacts(base, cur)
+    assert any("MISSING" in r and "sub3_fused_xla" in r for r in regs)
+    assert any("new row" in n and "brand_new_lane" in n for n in notes)
+
+
+def test_negative_sentinel_counters_skipped():
+    """-1 means 'lane unavailable on this host' (e.g. no cross-platform
+    lowering); it must compare as neither regression nor improvement."""
+    base = _artifact(["kernel/x,1.0,tpu_kernel_launches=-1"])
+    cur = _artifact(["kernel/x,1.0,tpu_kernel_launches=1"])
+    assert compare_artifacts(base, cur) == ([], [])
+    assert compare_artifacts(cur, base) == ([], [])
+
+
+def test_counter_keys_cover_the_bench_contract():
+    for key in ("operand_passes", "tpu_kernel_launches", "tpu_pack_ops"):
+        assert key in COUNTER_KEYS
+
+
+def test_main_exit_codes(tmp_path):
+    base = _artifact(BASE_CSV)
+    cur = copy.deepcopy(base)
+    pb, pc = tmp_path / "base.json", tmp_path / "cur.json"
+    pb.write_text(json.dumps(base))
+    pc.write_text(json.dumps(cur))
+    assert main([str(pb), str(pc)]) == 0
+    cur["rows"][1]["derived"] = "tpu_kernel_launches=3"
+    pc.write_text(json.dumps(cur))
+    assert main([str(pb), str(pc)]) == 1
+    assert main([str(pb), str(tmp_path / "nope.json")]) == 2
+    pc.write_text(json.dumps({"schema": "bogus", "rows": []}))
+    assert main([str(pb), str(pc)]) == 2
+
+
+def test_checked_in_baseline_validates_and_self_compares():
+    """The committed BENCH_baseline.json must conform to the frozen
+    schema and compare clean against itself -- the starting point of
+    the perf trajectory."""
+    import os
+
+    path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "benchmarks", "BENCH_baseline.json",
+    )
+    if not os.path.exists(path):
+        pytest.fail("benchmarks/BENCH_baseline.json is not checked in")
+    with open(path) as f:
+        doc = json.load(f)
+    from benchmarks.schema import validate_artifact
+
+    assert doc["schema"] == SCHEMA
+    validate_artifact(doc)
+    regs, notes = compare_artifacts(doc, copy.deepcopy(doc))
+    assert regs == [] and notes == []
+    names = {r["name"] for r in doc["rows"]}
+    # The lanes this PR's acceptance criteria name must be present.
+    assert any(n.startswith("kernel/quantize_pack_fused_") for n in names)
+    assert any(n.startswith("kernel/quantize_pack_twopass_")
+               for n in names)
+    assert any(n.startswith("kernel/gemm_autotune_") for n in names)
+    assert any(n.startswith("kernel/gemm_decode_reuse_") for n in names)

@@ -688,6 +688,12 @@ def main(smoke: bool = False, sharded: bool = True,
                 f"GFLOP/s={flops / (us * 1e-6) / 1e9:.1f}")
     )
 
+    # Serving lane: heavy-traffic continuous-batching trace + the
+    # skinny-M decode-tile contract (benchmarks/bench_serve.py).
+    from .bench_serve import bench_serve
+
+    bench_serve(rows, smoke=smoke)
+
     # Multi-device sharded lane (possibly via a forced-device child).
     if sharded:
         _bench_sharded(rows, smoke)

@@ -1,0 +1,139 @@
+"""Serving-engine bench lane (docs/serving.md): a heavy-traffic
+continuous-batching trace plus the skinny-M decode-tile contract.
+
+Two rows, emitted under the same ``repro.bench_kernels`` schema as the
+kernel lanes (and folded into ``bench_kernels --smoke`` so they ride in
+every CI artifact):
+
+* ``kernel/serve_trace_heavy`` — run a deterministic synthetic trace
+  (mixed prompt lengths, admissions streaming in throughout, per-request
+  token budgets) through the paged engine; ``us`` is wall time **per
+  generated token**, with total steps / prefill chunks / tokens and
+  tokens-per-second in the derived fields. ``steps`` is deterministic
+  for the fixed trace, so it gates at threshold 0 in
+  ``benchmarks.compare`` — a scheduler change that adds ticks fails the
+  gate even though the wall clock is interpreter-dominated (the name's
+  ``serve_trace`` fragment is time-exempt).
+* ``kernel/serve_decode_tile`` — assert the decode lane registered
+  skinny-M grids: with quantized weights and ``slots <= 16`` the
+  activation row block must be 16 (the bf16 TPU sublane minimum), i.e.
+  decode GEMMs do NOT pad the slots axis to 128. The row carries
+  ``decode_row_block`` as a gated counter.
+
+Standalone: ``PYTHONPATH=src python -m benchmarks.bench_serve --json out.json``
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import TENSOR_MOR, MoRPolicy
+from repro.kernels import ops as kops
+from repro.models import init_params
+from repro.serve import Engine, Request, ServeConfig
+
+from .common import csv_row
+from .schema import make_artifact
+
+# Fixed trace: (prompt_len, max_tokens, submit_at_step). Deliberately
+# staggered lengths; later requests arrive only once the engine is
+# already decoding earlier ones.
+TRACE = (
+    (5, 6, 0), (19, 4, 0), (11, 6, 0), (27, 3, 0),
+    (8, 5, 2), (33, 4, 4), (14, 6, 6), (22, 4, 8),
+)
+SMOKE_TRACE = TRACE[:5]
+
+
+def _serve_cfg():
+    cfg = dataclasses.replace(reduced(get_config("gemma-2b")), vocab=128)
+    return cfg
+
+
+def bench_serve(rows, smoke: bool = False):
+    trace = SMOKE_TRACE if smoke else TRACE
+    cfg = _serve_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(slots=4, max_seq=64, page_size=16,
+                       prefill_chunk=16)
+    eng = Engine(cfg, TENSOR_MOR, params, scfg,
+                 quantize=MoRPolicy(recipe="sub3"),
+                 quantize_min_size=1024)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, P).astype(np.int32),
+                    max_tokens=mt)
+            for i, (P, mt, _) in enumerate(trace)]
+
+    # Warm both jit traces (decode + chunk) off the clock, then reset.
+    warm = Request(10_000, np.arange(20, dtype=np.int32), max_tokens=2)
+    eng.submit(warm)
+    eng.run_to_completion()
+    assert warm.done
+    eng.steps = eng.decode_steps = eng.prefill_chunks = 0
+
+    t0 = time.time()
+    step = 0
+    pending = sorted(range(len(reqs)), key=lambda i: trace[i][2])
+    for i in pending:
+        if trace[i][2] == 0:
+            eng.submit(reqs[i])
+    live = True
+    while live and step < 500:
+        for i in pending:
+            if trace[i][2] == step and trace[i][2] > 0:
+                eng.submit(reqs[i])
+        live = eng.step()
+        step += 1
+    wall = time.time() - t0
+
+    assert all(r.done and len(r.out) == trace[i][1]
+               for i, r in enumerate(reqs)), "trace did not complete"
+    tokens = sum(len(r.out) for r in reqs)
+    rows.append(csv_row(
+        "kernel/serve_trace_heavy", wall / tokens * 1e6,
+        f"steps={eng.steps};decode_steps={eng.decode_steps};"
+        f"prefill_chunks={eng.prefill_chunks};tokens={tokens};"
+        f"requests={len(reqs)};tok_per_s={tokens / wall:.1f}",
+    ))
+
+    # Skinny-M contract: slots=4 -> 16-row activation blocks, and the
+    # decode-shaped grids actually landed in the autotune table.
+    rb = eng.decode_row_block
+    assert rb == kops.decode_row_block(scfg.slots) == 16 < 128, (
+        f"decode row block {rb}: decode lane is padding the slots axis"
+    )
+    decode_grids = [g for g in kops._GEMM_TILE_TABLE
+                    if g[0] == -(-scfg.slots // rb)]
+    assert decode_grids, "no decode-shaped GemmTile registrations"
+    rows.append(csv_row(
+        "kernel/serve_decode_tile", 0.0,
+        f"decode_row_block={rb};registered_grids={len(decode_grids)};"
+        f"slots={scfg.slots}",
+    ))
+
+
+def main(argv):
+    smoke = "--smoke" in argv
+    json_path = None
+    if "--json" in argv:
+        json_path = argv[argv.index("--json") + 1]
+    rows = []
+    bench_serve(rows, smoke=smoke)
+    for r in rows:
+        print(r)
+    if json_path:
+        with open(json_path, "w", encoding="utf-8") as f:
+            json.dump(make_artifact(rows), f, indent=1)
+        print(f"wrote {json_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

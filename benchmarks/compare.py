@@ -51,12 +51,17 @@ COUNTER_KEYS = (
     "tpu_pack_ops",
     "per_shard_tpu_kernel_launches",
     "replicated_tpu_kernel_launches",
+    # Serving lane: scheduler ticks for the fixed trace and the decode
+    # GEMM's activation row block -- both deterministic, so any growth
+    # (extra engine steps, slots axis padded toward 128) is structural.
+    "steps",
+    "decode_row_block",
 )
 
 # Name fragments of lanes whose wall clock is interpreter- or
 # subprocess-dominated: counts still compare, times are advisory-only
 # unless --time-all.
-TIME_EXEMPT_FRAGMENTS = ("_interp", "_sharded")
+TIME_EXEMPT_FRAGMENTS = ("_interp", "_sharded", "serve_trace")
 
 __doc__ = __doc__.format(counter_keys=", ".join(COUNTER_KEYS))
 

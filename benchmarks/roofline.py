@@ -1,5 +1,6 @@
 """Roofline report: reads the dry-run JSONs (experiments/dryrun/*.json)
-and prints the per-cell three-term table (EXPERIMENTS.md §Roofline)."""
+and prints the per-cell three-term table (per-device bytes and flops
+per step; see repro.launch.dryrun's traffic model)."""
 from __future__ import annotations
 
 import glob

@@ -154,7 +154,8 @@ def list_archs():
 
 
 def cell_is_runnable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
-    """Whether (arch x shape) is a defined dry-run cell (DESIGN.md §6)."""
+    """Whether (arch x shape) is a defined dry-run cell (see
+    repro.launch.dryrun)."""
     if shape.name == "long_500k" and not cfg.subquadratic:
         return False, "long_500k needs sub-quadratic attention (skip noted)"
     return True, ""
@@ -218,7 +219,9 @@ def input_specs(cfg: ArchConfig, shape: ShapeConfig):
         specs.update(_frontend_specs(cfg, b))
     elif shape.kind == "decode":
         specs["token"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
-        specs["cur_index"] = jax.ShapeDtypeStruct((), jnp.int32)
+        # One position per slot: mixed-length continuous batching reads
+        # and writes each row at its own position (docs/serving.md).
+        specs["cur_index"] = jax.ShapeDtypeStruct((b,), jnp.int32)
     else:
         raise ValueError(shape.kind)
     return specs

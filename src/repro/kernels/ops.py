@@ -52,6 +52,8 @@ __all__ = [
     "GemmTile",
     "gemm_tile_for",
     "register_gemm_tile",
+    "register_decode_tiles",
+    "decode_row_block",
     "QuantErr",
     "MorSelect",
     "MixedOperand",
@@ -354,6 +356,48 @@ _GEMM_TILE_TABLE: dict = {}
 def register_gemm_tile(n_m: int, n_n: int, n_k: int, tile: GemmTile):
     """Pin the tile for one block-grid shape (overrides the heuristic)."""
     _GEMM_TILE_TABLE[(n_m, n_n, n_k)] = tile
+
+
+def decode_row_block(m_rows: int, bk: int = 128) -> int:
+    """Activation row block for an m_rows-row decode GEMM: the 16-row
+    sublane tile for skinny batches (slots << 128), never a padded 128
+    (see ``ref.activation_row_block``)."""
+    return _ref.activation_row_block(m_rows, bk)
+
+
+def register_decode_tiles(params, m_rows: int) -> int:
+    """Pin the skinny-M decode lane for every quantized weight.
+
+    Serving decode GEMMs are (m_rows, K) @ (K, N) with m_rows = engine
+    slots << 128: the activation packs at the 16-row sublane tile
+    (``decode_row_block``), giving a 1 x n_k A grid whose per-(i, k)
+    decode stripes are tiny -- the k-keyed VMEM cache always fits, so
+    the lane is (decode_cache=True, bn_mult=1). Walks ``params`` for
+    QTensor-like leaves (anything exposing ``as_mixed_operand``) and
+    registers one table entry per distinct (n_m, n_n, n_k) block grid;
+    returns the number of grids registered. Idempotent.
+    """
+    grids = set()
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda l: hasattr(l, "as_mixed_operand")
+    )
+    for leaf in leaves:
+        if not hasattr(leaf, "as_mixed_operand"):
+            continue
+        mo = leaf.as_mixed_operand()
+        n_n, n_k = mo.tags.shape[-2], mo.tags.shape[-1]
+        bm = decode_row_block(m_rows, mo.block[1])
+        key = (-(-m_rows // bm), n_n, n_k)
+        register_gemm_tile(
+            *key,
+            GemmTile(
+                decode_cache=decode_cache_bytes(n_k, bm, mo.block[1])
+                <= DECODE_CACHE_BUDGET,
+                bn_mult=1,
+            ),
+        )
+        grids.add(key)
+    return len(grids)
 
 
 def gemm_tile_for(

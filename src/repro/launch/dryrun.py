@@ -82,7 +82,7 @@ def collective_bytes_from_hlo(hlo: str) -> Dict[str, Any]:
     """Sum operand bytes of collective ops in the partitioned HLO.
 
     Shapes in the partitioned module are per-device, so the totals here
-    are per-device traffic per step (see EXPERIMENTS.md §Roofline).
+    are per-device traffic per step (see benchmarks/roofline.py).
     """
     per_op = {c: 0 for c in _COLLECTIVES}
     counts = {c: 0 for c in _COLLECTIVES}
@@ -233,7 +233,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 sharding=NamedSharding(mesh, bspec),
             )
             idx_struct = jax.ShapeDtypeStruct(
-                (), jnp.int32, sharding=NamedSharding(mesh, P())
+                ins["cur_index"].shape, jnp.int32,
+                sharding=NamedSharding(mesh, P()),
             )
             # Serving donates the cache: the update happens in place
             # instead of temp-buffering a second full cache.

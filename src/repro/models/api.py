@@ -89,6 +89,15 @@ def make_prefill_fn(cfg: ArchConfig, policy: MoRDotPolicy):
 
 
 def make_decode_fn(cfg: ArchConfig, policy: MoRDotPolicy):
+    """decode_fn(params, tokens, cache, token, cur_index) -> (logits,
+    new_cache, stats).
+
+    ``token`` is (B, S) int32 -- S == 1 for a plain decode step, S > 1
+    for a prefill chunk written into the cache. ``cur_index`` is the
+    position of the last incoming token: a scalar () shared by the
+    batch, or a (B,) vector so each row of a mixed-length batch reads
+    and writes at its own true position (docs/serving.md)."""
+
     def decode_fn(params, tokens, cache, token, cur_index):
         logits, new_cache, stats = T.forward(
             cfg, policy, params, tokens, {"token": token},

@@ -140,37 +140,50 @@ def decode_attention(
     k_scale: jnp.ndarray = None,
     v_scale: jnp.ndarray = None,
 ) -> jnp.ndarray:
-    """Single-token attention against a KV cache.
+    """Attention for decode / chunked prefill against a KV cache.
 
-    q: (B, 1, Hq, dh); caches: (B, T, Hkv, dh); cur_index: () current
-    position (the caches hold valid entries at positions <= cur_index).
+    q: (B, S, Hq, dh) with S >= 1 (S == 1 is plain decode; S > 1 is a
+    prefill chunk); caches: (B, T, Hkv, dh). ``cur_index`` is the
+    position of the *last* query token, either a scalar () shared by
+    the batch or a (B,) vector of per-sequence positions -- each row of
+    the batch masks against its own position, so mixed-length batches
+    never attend across another request's length (docs/serving.md).
+    Query s of row b sits at position cur_index[b] - (S - 1) + s; only
+    cache entries at k_pos <= that position are visible. Entries beyond
+    a row's own position are garbage by contract and must stay masked:
+    zero-filled keys are NOT harmless (exp(0) = 1 takes real softmax
+    mass).
 
-    FP8 caches (beyond-paper, DESIGN.md §3): payloads are float8_e4m3
-    with per-(position, head) scales (B, T, Hkv). The scales factor out
-    of both einsums -- scores divide by k_scale after the QK dot, and
-    v_scale folds into the probabilities -- so the dequant never
-    materializes a full-precision cache copy.
+    FP8 caches (beyond-paper, docs/serving.md): payloads are
+    float8_e4m3 with per-(position, head) scales (B, T, Hkv). The
+    scales factor out of both einsums -- scores divide by k_scale after
+    the QK dot, and v_scale folds into the probabilities -- so the
+    dequant never materializes a full-precision cache copy.
     """
-    B, _, Hq, dh = q.shape
+    B, S, Hq, dh = q.shape
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     scale = dh**-0.5
-    qg = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, dh)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    qg = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, G, dh)
+    s = jnp.einsum("bshgd,bkhd->bhgsk", qg, k_cache.astype(jnp.float32))
     if k_scale is not None:
         ks = jnp.where(k_scale > 0, k_scale, 1.0)  # empty slots: scale 0
-        s = s / jnp.moveaxis(ks, 1, 2)[:, :, None, :]  # (B,Hkv,1,T)
+        s = s / jnp.moveaxis(ks, 1, 2)[:, :, None, None, :]  # (B,Hkv,1,1,T)
+    cur = jnp.broadcast_to(
+        jnp.atleast_1d(jnp.asarray(cur_index, jnp.int32)), (B,)
+    )
+    q_pos = cur[:, None] - (S - 1) + jnp.arange(S)  # (B, S)
     k_pos = jnp.arange(T)
-    valid = k_pos <= cur_index
+    valid = k_pos[None, None, :] <= q_pos[:, :, None]  # (B, S, T)
     if window:
-        valid &= k_pos > cur_index - window
-    s = jnp.where(valid[None, None, None], s, _NEG)
+        valid &= k_pos[None, None, :] > q_pos[:, :, None] - window
+    s = jnp.where(valid[:, None, None], s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     if v_scale is not None:
         vs = jnp.where(v_scale > 0, v_scale, 1.0)
-        p = p / jnp.moveaxis(vs, 1, 2)[:, :, None, :]
-    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
-    return out.reshape(B, 1, Hq, dh).astype(q.dtype)
+        p = p / jnp.moveaxis(vs, 1, 2)[:, :, None, None, :]
+    out = jnp.einsum("bhgsk,bkhd->bshgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, S, Hq, dh).astype(q.dtype)
 
 
 def quantize_kv(x: jnp.ndarray):

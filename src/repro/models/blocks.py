@@ -79,19 +79,27 @@ def attn_sublayer(
     q, k, v = _split_qkv(qkv, cfg)
 
     if mode == "decode":
-        pos = jnp.full((B, 1), cur_index, jnp.int32)
+        # cur_index is the position of the LAST query token: a scalar
+        # shared across the batch, or a (B,) vector of per-slot
+        # positions (the serving engine's mixed-length batches). The
+        # incoming S tokens land at positions cur - (S-1) .. cur, each
+        # row at its own offset, written *before* attention so a row's
+        # own keys are always visible (docs/serving.md).
+        cur = jnp.broadcast_to(
+            jnp.atleast_1d(jnp.asarray(cur_index, jnp.int32)), (B,)
+        )
+        pos = cur[:, None] - (S - 1) + jnp.arange(S, dtype=jnp.int32)[None]
         if use_rope:
             q = apply_rope(q, pos, cfg.rope_theta)
             k = apply_rope(k, pos, cfg.rope_theta)
+        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+        upd = lambda buf, val: buf.at[rows, pos].set(val.astype(buf.dtype))
         fp8_cache = "k_scale" in cache
         if fp8_cache:
             from .attention import quantize_kv
 
             k_pay, k_s = quantize_kv(k)
             v_pay, v_s = quantize_kv(v)
-            upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
-                buf, val.astype(buf.dtype), cur_index, axis=1
-            )
             new_cache = {
                 "k": upd(cache["k"], k_pay),
                 "v": upd(cache["v"], v_pay),
@@ -99,19 +107,15 @@ def attn_sublayer(
                 "v_scale": upd(cache["v_scale"], v_s),
             }
             out = decode_attention(
-                q, new_cache["k"], new_cache["v"], cur_index,
+                q, new_cache["k"], new_cache["v"], cur,
                 window=window, k_scale=new_cache["k_scale"],
                 v_scale=new_cache["v_scale"],
             )
         else:
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), cur_index, axis=1
-            )
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), cur_index, axis=1
-            )
+            k_cache = upd(cache["k"], k)
+            v_cache = upd(cache["v"], v)
             out = decode_attention(
-                q, k_cache, v_cache, cur_index, window=window
+                q, k_cache, v_cache, cur, window=window
             )
             new_cache = {"k": k_cache, "v": v_cache}
     else:

@@ -1,7 +1,7 @@
 """Recurrent sequence mixers: Mamba-style selective SSM (Hymba's parallel
 head branch) and xLSTM cells (mLSTM matrix memory + sLSTM scalar memory).
 
-TPU adaptation notes (DESIGN.md §3): all *time-parallel* projections are
+TPU adaptation notes (docs/architecture.md): all *time-parallel* projections are
 hoisted out of the recurrence and MoR-quantized (they are the GEMM hot
 spots); the per-step recurrences run under a remat-chunked lax.scan with
 states sharded over the model axis (d_inner channels for Mamba, the value

@@ -6,7 +6,8 @@ in ``cfg.unit`` and scanned over layers (homogeneous stacks compile to one
 HLO body regardless of depth; xLSTM's (mlstm, slstm) unit scans pairs).
 
 Modes: 'train' (full-seq causal/prefix forward), 'prefill' (forward +
-emit caches), 'decode' (one token against caches).
+emit caches), 'decode' (new tokens against caches at per-row positions:
+one token per step, or an S-token chunk for chunked prefill).
 
 Vocab handling: embeddings are padded to a multiple of 128 so the vocab
 axis shards evenly at TP=16; padded logit columns are masked to -inf
@@ -527,8 +528,11 @@ def forward(
 ):
     """Returns (logits, new_cache, stats).
 
-    batch keys: 'tokens' (B,S) [train/prefill], 'token' (B,1) [decode],
-    plus 'frames' (audio) / 'patches' (vlm) stubs.
+    batch keys: 'tokens' (B,S) [train/prefill], 'token' (B,S) [decode:
+    S == 1 for plain decode, S > 1 for a prefill chunk against the
+    cache], plus 'frames' (audio) / 'patches' (vlm) stubs. In decode
+    mode ``cur_index`` -- scalar or (B,) vector -- is the position of
+    the last incoming token per batch row (docs/serving.md).
     """
     Vp = padded_vocab(cfg)
     embed = params["embed"]
@@ -546,12 +550,21 @@ def forward(
         x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
         attn_kw = {"kind": "prefix", "prefix_len": cfg.img_tokens}
     if cfg.family == "hybrid" and cfg.window:
-        # Hymba: sliding-window attention + global SSM state (DESIGN.md §6).
+        # Hymba: sliding-window attention + global SSM state
+        # (docs/architecture.md).
         attn_kw = {"kind": "sliding", "window": cfg.window}
     if cfg.family == "audio":
         attn_kw = {"use_rope": False, "kind": "causal"}
         if mode == "decode":
-            pos = _sinusoidal_at(cur_index, cfg.d_model)[None, None]
+            # cur_index: () or (B,) position of the last incoming token
+            # (same convention as decode_attention); the S incoming
+            # tokens sit at cur - (S-1) .. cur per batch row.
+            S = x.shape[1]
+            cur = jnp.atleast_1d(jnp.asarray(cur_index, jnp.int32))
+            posn = cur[:, None] - (S - 1) + jnp.arange(S)  # (b, S)
+            pos = jax.vmap(jax.vmap(
+                lambda i: _sinusoidal_at(i, cfg.d_model)
+            ))(posn)  # (b, S, d)
         else:
             pos = sinusoidal_positions(x.shape[1], cfg.d_model)[None]
         x = x + pos.astype(x.dtype)

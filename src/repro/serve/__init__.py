@@ -1,4 +1,5 @@
-from .engine import Engine, Request, ServeConfig
+from .engine import Engine, PromptTooLongError, Request, ServeConfig
+from .paged import PagedKVPool
 from .quantized import (
     QTensor,
     qdot,
@@ -7,5 +8,6 @@ from .quantized import (
     quantize_weight_stacked,
 )
 
-__all__ = ["Engine", "Request", "ServeConfig", "QTensor", "qdot",
-           "quantize_params", "quantize_weight", "quantize_weight_stacked"]
+__all__ = ["Engine", "Request", "ServeConfig", "PromptTooLongError",
+           "PagedKVPool", "QTensor", "qdot", "quantize_params",
+           "quantize_weight", "quantize_weight_stacked"]

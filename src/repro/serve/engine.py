@@ -1,15 +1,37 @@
-"""Batched serving engine: continuous-batching decode loop over a fixed
-slot pool, with prefill admission and per-slot completion.
+"""Continuous-batching serving engine over a paged KV pool.
 
-Slots hold one request each; the engine admits new requests into free
-slots (prefill -> cache splice), then advances ALL active slots with one
-jitted decode step per iteration (the batched serve_step the dry-run
-lowers for decode_* shapes). Greedy sampling; per-slot stop on max_tokens.
+Every slot advances at its *own* position: the jitted step takes a
+vector ``cur_index`` (one entry per slot), so mixed-prompt-length
+batches read and write exactly their true cache rows. (The engine this
+replaces shared one ``max(slot_pos)`` across the batch, which wrote
+short slots' KV past their real position and left zero-filled holes the
+decode mask treated as valid keys -- zero-score keys take real softmax
+mass, so mixed-length batches produced wrong tokens.)
+
+The loop is a real scheduler (docs/serving.md):
+
+- KV lives in a ``PagedKVPool`` (block table + free list, page size
+  aligned to the MoR ``Partition`` block grid); admission reserves a
+  request's worst-case page span, eviction recycles it.
+- Prefill is *chunked* and interleaved with decode: each engine step
+  runs one fixed-size prompt chunk per prefilling slot (compiled once
+  per chunk shape, never re-prefilling the whole sequence) plus one
+  batched decode step over the decoding slots. Families with recurrent
+  state (Hymba SSM, xLSTM cells) prefill in one shot at admission --
+  their recurrence can't resume from a page -- and then join the same
+  batched decode.
+- Per-request ``max_tokens`` and sampling params (greedy by default;
+  ``temperature`` / ``top_k`` / ``seed`` for stochastic decode).
+- With quantized weights, decode GEMMs are (slots, K, N) with
+  slots << 128: the engine pins the skinny-M lane in the ``GemmTile``
+  autotune table so activations pack at the 16-row sublane tile, not
+  a padded 128.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,16 +39,18 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import MoRDotPolicy, MoRPolicy
-from repro.models import (
-    init_cache,
-    make_decode_fn,
-    make_prefill_fn,
-    make_tokens,
-)
+from repro.models import make_decode_fn, make_prefill_fn, make_tokens
+from repro.models.attention import quantize_kv
 
+from .paged import PagedKVPool
 from .quantized import quantize_params
 
-__all__ = ["Request", "ServeConfig", "Engine"]
+__all__ = ["Request", "ServeConfig", "Engine", "PromptTooLongError"]
+
+
+class PromptTooLongError(ValueError):
+    """Prompt has no room in the cache (P >= max_seq): there would be
+    nowhere to write even the first generated token's KV."""
 
 
 @dataclasses.dataclass
@@ -34,14 +58,36 @@ class Request:
     rid: int
     prompt: np.ndarray  # (P,) int32
     max_tokens: int = 16
+    # Sampling: temperature <= 0 is greedy argmax; otherwise softmax
+    # sampling at the given temperature, optionally top_k-truncated,
+    # seeded per request (host-side RNG -> reproducible per rid/seed).
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Surfaced condition: explicit truncation at submit, or
+    # "unfinished" when run_to_completion exhausts max_steps.
+    error: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     slots: int = 4
     max_seq: int = 512
+    # Paged pool: page_size must divide max_seq and tile the 128-row
+    # MoR Partition block; pool_pages < slots * (max_seq / page_size)
+    # oversubscribes (requests then queue on the free list).
+    page_size: Optional[int] = None
+    pool_pages: Optional[int] = None
+    # Chunked prefill: tokens per chunk (must divide max_seq). One
+    # chunk per prefilling slot per engine step.
+    prefill_chunk: int = 32
+    kv_fp8: bool = False
+    # P >= max_seq at submit: 'reject' raises PromptTooLongError,
+    # 'truncate' keeps the first max_seq - 1 tokens and records the
+    # truncation on request.error.
+    on_long_prompt: str = "reject"
 
 
 class Engine:
@@ -53,7 +99,9 @@ class Engine:
         """``quantize``: optional ahead-of-time MoR storage decision --
         weight leaves become sub-tensor QTensors (per-block E4M3 / E5M2
         / BF16 payloads) and every prefill/decode matmul against them
-        runs through the mixed-representation block GEMM kernel.
+        runs through the mixed-representation block GEMM kernel; the
+        engine also registers the skinny-M decode tile for each
+        quantized weight's block grid (kernels.ops.register_decode_tiles).
 
         ``mesh``: optional jax Mesh for tensor-parallel serving. Params
         (dense *and* QTensor leaves -- payloads, tags and scales shard
@@ -66,13 +114,32 @@ class Engine:
             eng = Engine(cfg, policy, params,
                          quantize=MoRPolicy(recipe="sub3"), mesh=mesh)
         """
+        if cfg.family in ("audio", "vlm"):
+            raise NotImplementedError(
+                f"family {cfg.family!r} needs a modality frontend the "
+                "engine does not drive (frames/patches inputs)"
+            )
+        if scfg.max_seq % scfg.prefill_chunk:
+            raise ValueError(
+                f"prefill_chunk {scfg.prefill_chunk} must divide "
+                f"max_seq {scfg.max_seq}"
+            )
         self.cfg = cfg
         self.scfg = scfg
         self.qstats = None
+        self.decode_row_block = None
         if quantize is not None:
             params, self.qstats = quantize_params(
                 params, quantize, min_size=quantize_min_size
             )
+            from repro.kernels import ops as kops
+
+            # Decode activations are (slots, d): pin the skinny-M lane
+            # so the GEMM autotune never pads the slots axis to 128.
+            self.decode_tile_grids = kops.register_decode_tiles(
+                params, scfg.slots
+            )
+            self.decode_row_block = kops.decode_row_block(scfg.slots)
         if mesh is not None:
             from repro.sharding import rules as _rules
 
@@ -82,88 +149,252 @@ class Engine:
             )
         self.params = params
         self.tokens = make_tokens(cfg)
+        self.pool = PagedKVPool(
+            cfg, scfg.slots, scfg.max_seq, page_size=scfg.page_size,
+            kv_fp8=scfg.kv_fp8, n_pages=scfg.pool_pages,
+        )
+        # Chunked prefill needs every cache leaf positional (pageable);
+        # recurrent-state families prefill in one shot at admission.
+        self.chunked_prefill = self.pool.all_paged and self.pool.has_paged
         self._prefill = jax.jit(make_prefill_fn(cfg, policy))
-        self._decode = jax.jit(make_decode_fn(cfg, policy))
-        self.cache = init_cache(cfg, scfg.slots, scfg.max_seq)
-        self.slot_req: List[Optional[Request]] = [None] * scfg.slots
-        self.slot_pos = np.zeros(scfg.slots, np.int32)
-        self.slot_next = np.zeros(scfg.slots, np.int32)
-        self.queue: List[Request] = []
+        decode = make_decode_fn(cfg, policy)
+        pool = self.pool
+
+        def step_fn(params, tokens, ptree, bt, toks, cur):
+            cache = pool.gather(ptree, bt)
+            logits, new_cache, _ = decode(params, tokens, cache, toks, cur)
+            S = toks.shape[1]
+            positions = (
+                cur[:, None] - (S - 1) + jnp.arange(S, dtype=jnp.int32)[None]
+            )
+            return logits, pool.scatter(ptree, new_cache, bt, positions)
+
+        # One compiled variant per token-block shape: (slots, 1) decode
+        # and (1, prefill_chunk) chunked prefill.
+        self._step_fn = jax.jit(step_fn, donate_argnums=(2,))
+
+        n = scfg.slots
+        self.slot_req: List[Optional[Request]] = [None] * n
+        self.slot_pos = np.zeros(n, np.int32)   # next cache write position
+        self.slot_next = np.zeros(n, np.int32)  # next input token id
+        self.slot_state = ["idle"] * n          # idle | prefill | decode
+        self.slot_filled = np.zeros(n, np.int32)  # prompt tokens consumed
+        self.queue: Deque[Request] = collections.deque()
+        self.unfinished: List[Request] = []
+        self.steps = 0
+        self.decode_steps = 0
+        self.prefill_chunks = 0
 
     # ------------------------------------------------------------- admin --
     def submit(self, req: Request):
+        """Queue a request. Prompts with P >= max_seq cannot fit (the
+        first generated token's KV is written at position P): per
+        ``ServeConfig.on_long_prompt`` they are rejected here or
+        explicitly truncated with the event surfaced on ``req.error``."""
+        P = len(req.prompt)
+        if P < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        limit = self.scfg.max_seq - 1
+        if P > limit:
+            if self.scfg.on_long_prompt == "truncate":
+                req.prompt = np.asarray(req.prompt)[:limit]
+                req.error = (
+                    f"prompt truncated {P} -> {limit} tokens "
+                    f"(max_seq={self.scfg.max_seq})"
+                )
+            else:
+                raise PromptTooLongError(
+                    f"request {req.rid}: prompt of {P} tokens exceeds "
+                    f"the max_seq - 1 = {limit} limit (set "
+                    "on_long_prompt='truncate' to clip instead)"
+                )
         self.queue.append(req)
 
-    def _free_slot(self) -> Optional[int]:
-        for i, r in enumerate(self.slot_req):
-            if r is None:
-                return i
-        return None
+    def _horizon(self, req: Request) -> int:
+        """Highest cache position + 1 this request can touch: chunked
+        prefill writes (padded) whole chunks; decode writes the
+        (max_tokens - 1) sampled continuations after the prompt."""
+        P = len(req.prompt)
+        C = self.scfg.prefill_chunk
+        span = -(-P // C) * C if self.chunked_prefill else P
+        return min(max(span, P + req.max_tokens - 1), self.scfg.max_seq)
 
     def _admit(self):
-        while self.queue and self._free_slot() is not None:
-            slot = self._free_slot()
-            req = self.queue.pop(0)
-            P = len(req.prompt)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, pcache, _ = self._prefill(
-                self.params, self.tokens, {"tokens": prompt}
-            )
-            # Splice the single-sequence prefill cache into this slot.
-            def splice(full, part):
-                if full.ndim >= 4 and part.ndim == full.ndim and \
-                        full.shape[2] != part.shape[2]:
-                    part = jax.lax.dynamic_update_slice_in_dim(
-                        jnp.zeros(
-                            (part.shape[0], 1, full.shape[2],
-                             *part.shape[3:]), full.dtype
-                        ),
-                        part.astype(full.dtype), 0, axis=2,
-                    )
-                return jax.lax.dynamic_update_slice_in_dim(
-                    full, part.astype(full.dtype), slot, axis=1
-                )
-
-            self.cache = jax.tree.map(splice, self.cache, pcache)
-            nxt = int(jnp.argmax(logits[0, -1]))
-            req.out.append(nxt)
+        # Single scan over the slot list per engine step; pages are
+        # reserved all-or-nothing so admitted requests never starve
+        # mid-flight when the pool is oversubscribed.
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        for slot in free:
+            if not self.queue:
+                return
+            req = self.queue[0]
+            if not self.pool.alloc(slot, self._horizon(req)):
+                return  # wait for evictions to refill the free list
+            self.queue.popleft()
             self.slot_req[slot] = req
-            self.slot_pos[slot] = P
-            self.slot_next[slot] = nxt
+            self.slot_filled[slot] = 0
+            if self.chunked_prefill:
+                self.slot_state[slot] = "prefill"
+            else:
+                self._full_prefill(slot, req)
+
+    # ----------------------------------------------------------- prefill --
+    def _full_prefill(self, slot: int, req: Request):
+        """One-shot prefill for recurrent-state families: the cache the
+        model emits is spliced into this slot's pages / state row."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, pcache, _ = self._prefill(
+            self.params, self.tokens, {"tokens": prompt}
+        )
+        by_key: Dict[str, jnp.ndarray] = {}
+        flat, _ = jax.tree_util.tree_flatten_with_path(pcache)
+        for path, leaf in flat:
+            key = "/".join(
+                str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+            )
+            by_key[key] = leaf
+        if self.scfg.kv_fp8:
+            for key in list(by_key):
+                last = key.rsplit("/", 1)[-1]
+                if last in ("k", "v"):
+                    pay, sc = quantize_kv(by_key[key])
+                    by_key[key] = pay
+                    by_key[key + "_scale"] = sc
+        self.pool.splice(slot, by_key, len(req.prompt))
+        self._start_decode(slot, req, len(req.prompt),
+                           np.asarray(logits[0, -1], np.float32))
+
+    def _prefill_chunk_step(self, slot: int, req: Request):
+        """Advance one prompt chunk for a prefilling slot (B=1 call
+        against this slot's page-table row)."""
+        C = self.scfg.prefill_chunk
+        start = int(self.slot_filled[slot])
+        P = len(req.prompt)
+        chunk = np.zeros(C, np.int32)
+        real = min(C, P - start)
+        chunk[:real] = np.asarray(req.prompt)[start:start + real]
+        bt = self.pool.table_rows([slot])
+        logits, tree = self._step_fn(
+            self.params, self.tokens, self.pool.tree, bt,
+            jnp.asarray(chunk[None]), jnp.asarray([start + C - 1], jnp.int32),
+        )
+        self.pool.update(tree)
+        self.prefill_chunks += 1
+        self.slot_filled[slot] = start + real
+        if start + real >= P:
+            # The chunk's logits at the last *real* prompt token seed
+            # generation (padded tail positions are written but masked
+            # until real tokens overwrite them).
+            row = np.asarray(logits[0, real - 1], np.float32)
+            self._start_decode(slot, req, P, row)
+
+    def _start_decode(self, slot: int, req: Request, P: int,
+                      logits_row: np.ndarray):
+        tok = self._sample(req, logits_row)
+        req.out.append(tok)
+        self.slot_pos[slot] = P
+        self.slot_next[slot] = tok
+        self.slot_state[slot] = "decode"
+        # The prefill-sampled token counts toward max_tokens: a
+        # max_tokens=1 request is complete right here, before any
+        # decode step runs.
+        if len(req.out) >= req.max_tokens:
+            self._finish(slot)
+
+    # ------------------------------------------------------------ decode --
+    def _decode_batch(self, dec: List[int]):
+        n = self.scfg.slots
+        mask = np.zeros(n, bool)
+        mask[dec] = True
+        # Non-decoding slots ride along in the batched call with their
+        # rows pointed at the trash page: their writes can't touch real
+        # pages and their (garbage) logits are discarded.
+        bt = np.where(
+            mask[:, None], self.pool.block_table, self.pool.trash
+        ).astype(np.int32)
+        toks = np.where(mask, self.slot_next, 0).astype(np.int32)[:, None]
+        cur = np.where(mask, self.slot_pos, 0).astype(np.int32)
+        logits, tree = self._step_fn(
+            self.params, self.tokens, self.pool.tree, jnp.asarray(bt),
+            jnp.asarray(toks), jnp.asarray(cur),
+        )
+        self.pool.update(tree)
+        self.decode_steps += 1
+        rows = np.asarray(logits[:, 0], np.float32)
+        for i in dec:
+            r = self.slot_req[i]
+            tok = self._sample(r, rows[i])
+            r.out.append(tok)
+            self.slot_pos[i] += 1
+            self.slot_next[i] = tok
+            # Done when the budget is spent or the *next* write
+            # position would overflow the cache (position max_seq - 1
+            # is still usable -- stopping at slot_pos + 1 >= max_seq
+            # would waste it).
+            if len(r.out) >= r.max_tokens or \
+                    self.slot_pos[i] >= self.scfg.max_seq:
+                self._finish(i)
+
+    def _sample(self, req: Request, row: np.ndarray) -> int:
+        V = self.cfg.vocab
+        row = row[:V]
+        if req.temperature <= 0.0:
+            return int(row.argmax())
+        rng = getattr(req, "_rng", None)
+        if rng is None:
+            rng = np.random.default_rng((req.seed, req.rid))
+            req._rng = rng
+        z = row.astype(np.float64) / req.temperature
+        if req.top_k and req.top_k < V:
+            kth = np.partition(z, -req.top_k)[-req.top_k]
+            z = np.where(z >= kth, z, -np.inf)
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        return int(rng.choice(V, p=p))
+
+    def _finish(self, slot: int):
+        self.slot_req[slot].done = True
+        self.slot_req[slot] = None
+        self.slot_state[slot] = "idle"
+        self.slot_pos[slot] = 0
+        self.slot_next[slot] = 0
+        self.slot_filled[slot] = 0
+        self.pool.release(slot)
 
     # -------------------------------------------------------------- step --
-    def step(self):
-        """One batched decode step across all active slots."""
+    def step(self) -> bool:
+        """One scheduler tick: admit, one prefill chunk per prefilling
+        slot, one batched decode step over decoding slots. Returns
+        False once no request is queued or in flight."""
         self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return False
-        toks = jnp.asarray(self.slot_next, jnp.int32)[:, None]
-        # One shared cur_index per jitted step: use the max position and
-        # rely on per-slot masks being monotone (positions beyond a slot's
-        # own length hold zeros -- attention over zeros contributes a
-        # constant the softmax normalizes out for short overhangs; exact
-        # per-slot indices would need a vector cur_index, noted in DESIGN).
-        cur = int(self.slot_pos.max())
-        logits, self.cache, _ = self._decode(
-            self.params, self.tokens, self.cache, toks,
-            jnp.asarray(cur, jnp.int32),
-        )
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-        for i in active:
-            r = self.slot_req[i]
-            r.out.append(int(nxt[i]))
-            self.slot_pos[i] += 1
-            self.slot_next[i] = int(nxt[i])
-            if len(r.out) >= r.max_tokens or self.slot_pos[i] + 1 >= \
-                    self.scfg.max_seq:
-                r.done = True
-                self.slot_req[i] = None
-        return True
+        worked = False
+        for i in range(self.scfg.slots):
+            if self.slot_state[i] == "prefill":
+                self._prefill_chunk_step(i, self.slot_req[i])
+                worked = True
+        dec = [i for i in range(self.scfg.slots)
+               if self.slot_state[i] == "decode"]
+        if dec:
+            self._decode_batch(dec)
+            worked = True
+        if worked:
+            self.steps += 1
+        return worked or bool(self.queue)
 
     def run_to_completion(self, max_steps: int = 1024) -> int:
+        """Drive steps until drained (or ``max_steps``). Requests still
+        queued or in flight at exhaustion are reported: each gets
+        ``error`` set and they are collected on ``self.unfinished``
+        (with ``done`` left False) instead of silently dropped."""
         steps = 0
         while (self.queue or any(self.slot_req)) and steps < max_steps:
             self.step()
             steps += 1
+        self.unfinished = list(self.queue) + [
+            r for r in self.slot_req if r is not None
+        ]
+        for r in self.unfinished:
+            note = f"unfinished after {max_steps} engine steps"
+            r.error = f"{r.error}; {note}" if r.error else note
         return steps

@@ -1,0 +1,254 @@
+"""Paged KV-cache pool for continuous-batching decode (docs/serving.md).
+
+The dense per-slot cache (``(n_units, slots, max_seq, ...)`` per leaf)
+reserves every slot's worst-case sequence up front. This module replaces
+it with a vLLM-style page pool: KV leaves are stored as
+``(n_units, n_pages + 1, page_size, ...)`` physical pages, a per-slot
+block table maps logical position ``p`` to ``(bt[slot, p // page_size],
+p % page_size)``, and a host-side free list recycles pages as requests
+finish. Only leaves whose sequence axis spans ``max_seq`` are paged
+(``k``/``v`` and the fp8 ``k_scale``/``v_scale``); recurrent state
+leaves (SSM / xLSTM cells, Whisper cross-KV) have no position axis and
+stay slot-dense.
+
+Page size is aligned to the MoR ``Partition`` block grid: a page's row
+count must evenly tile the 128-row block dimension (``128 % page_size
+== 0`` or ``page_size % 128 == 0``), so a page -- ``(page_size,
+hkv * hd)`` tokens-by-features -- can later be stored as a
+``MixedOperand`` payload (per-block E4M3/E5M2/BF16/NVFP4, the SNIP-style
+sub-byte cache tier) without re-blocking: whole MoR blocks are unions of
+whole pages or vice versa.
+
+The last physical page (index ``n_pages``) is the *trash page*: block
+tables of empty or still-prefilling slots point every entry at it, so a
+batched decode step can always run over all slots -- writes from
+inactive rows land in trash, reads from it see garbage that the
+per-slot ``cur_index`` mask keeps out of the softmax, and no scatter
+index is ever out of bounds.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import cache_specs
+
+__all__ = ["PagedKVPool", "MOR_BLOCK_ROWS"]
+
+MOR_BLOCK_ROWS = 128  # Partition("block").block_shape[0]
+
+
+def _leaf_key(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _is_paged_key(key: str) -> bool:
+    """KV leaves with a max_seq position axis; xk/xv (encoder cross-KV,
+    enc_seq axis) and recurrent state stay dense."""
+    last = key.rsplit("/", 1)[-1]
+    return last in ("k", "v", "k_scale", "v_scale")
+
+
+class PagedKVPool:
+    """Page pool + block table + free list over one model's cache tree.
+
+    ``n_pages`` defaults to ``slots * (max_seq // page_size)`` (no
+    oversubscription: every slot can hold a full sequence). A smaller
+    pool makes admission wait on the free list instead -- the engine
+    reserves a request's worst-case page count up front so a running
+    request can never starve mid-decode.
+    """
+
+    def __init__(self, cfg: ArchConfig, slots: int, max_seq: int,
+                 page_size: Optional[int] = None, kv_fp8: bool = False,
+                 n_pages: Optional[int] = None):
+        page_size = page_size or min(64, max_seq)
+        if max_seq % page_size:
+            raise ValueError(
+                f"page_size {page_size} must divide max_seq {max_seq}"
+            )
+        if (MOR_BLOCK_ROWS % page_size) and (page_size % MOR_BLOCK_ROWS):
+            raise ValueError(
+                f"page_size {page_size} is not MoR-block aligned: it "
+                f"must evenly tile the {MOR_BLOCK_ROWS}-row Partition "
+                "block (divide it or be a multiple of it) so pages can "
+                "hold MixedOperand payloads"
+            )
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.kv_fp8 = kv_fp8
+        self.pages_per_seq = max_seq // page_size
+        self.n_pages = (slots * self.pages_per_seq if n_pages is None
+                        else n_pages)
+        self.trash = self.n_pages  # last physical page
+
+        specs = cache_specs(cfg, slots, max_seq, kv_fp8)
+        flat, self._treedef = jax.tree_util.tree_flatten_with_path(specs)
+        self._keys = [_leaf_key(p) for p, _ in flat]
+        self._paged = [_is_paged_key(k) for k in self._keys]
+        self.has_paged = any(self._paged)
+        self.all_paged = all(self._paged)
+
+        def storage(spec, paged):
+            if paged:
+                # (n_units, B, max_seq, ...) -> (n_units, pages, ps, ...)
+                n_units, _, _, *tail = spec.shape
+                return jnp.zeros(
+                    (n_units, self.n_pages + 1, page_size, *tail),
+                    spec.dtype,
+                )
+            return jnp.zeros(spec.shape, spec.dtype)
+
+        self._leaves = [storage(s, pg)
+                        for (_, s), pg in zip(flat, self._paged)]
+        # Host-side bookkeeping: block table + free list.
+        self.block_table = np.full(
+            (slots, self.pages_per_seq), self.trash, np.int32
+        )
+        self.free: collections.deque = collections.deque(
+            range(self.n_pages)
+        )
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+
+    # ------------------------------------------------------- allocation --
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    def pages_for(self, n_positions: int) -> int:
+        return -(-n_positions // self.page_size)
+
+    def alloc(self, slot: int, n_positions: int) -> bool:
+        """Reserve pages covering positions [0, n_positions) for
+        ``slot``. All-or-nothing; False if the free list is short."""
+        need = self.pages_for(n_positions) - len(self._owned[slot])
+        if need <= 0:
+            return True
+        if need > len(self.free):
+            return False
+        got = [self.free.popleft() for _ in range(need)]
+        start = len(self._owned[slot])
+        self._owned[slot].extend(got)
+        self.block_table[slot, start:start + len(got)] = got
+        return True
+
+    def release(self, slot: int):
+        """Return ``slot``'s pages to the free list (eviction). The
+        page *contents* are stale, not zeroed: the per-slot cur_index
+        mask hides them until real tokens overwrite each position."""
+        self.free.extend(self._owned[slot])
+        self._owned[slot] = []
+        self.block_table[slot, :] = self.trash
+
+    # ------------------------------------------------- jitted-side view --
+    @property
+    def tree(self):
+        """The pool as a pytree (pool-layout paged leaves + dense state
+        leaves) -- pass to the jitted step, then `update` with its
+        output so donation can reuse the buffers."""
+        return jax.tree_util.tree_unflatten(self._treedef, self._leaves)
+
+    def update(self, tree):
+        self._leaves = jax.tree_util.tree_leaves(tree)
+
+    def table_rows(self, rows) -> jnp.ndarray:
+        """Device copy of the block-table rows for ``rows`` (list of
+        slot ids); inactive callers pass all-trash rows instead."""
+        return jnp.asarray(self.block_table[rows], jnp.int32)
+
+    def gather(self, tree, bt: jnp.ndarray):
+        """Pool tree -> dense cache tree for the model call.
+
+        ``bt`` (B, pages_per_seq) int32 selects each row's pages; paged
+        leaves become (n_units, B, max_seq, ...). Dense state leaves
+        pass through (their batch axis is the full slot count -- the
+        caller only mixes them into full-width batches).
+        """
+        B, pp = bt.shape
+        ps = self.page_size
+
+        def g(key, leaf):
+            if not _is_paged_key(key):
+                return leaf
+            n_units, _, _, *tail = leaf.shape
+            out = leaf[:, bt]  # (n_units, B, pp, ps, *tail)
+            return out.reshape(n_units, B, pp * ps, *tail)
+
+        return self._map(g, tree)
+
+    def scatter(self, tree, new_dense, bt: jnp.ndarray,
+                positions: jnp.ndarray):
+        """Write back the rows a decode/chunk step touched.
+
+        ``positions`` (B, S): the S positions each row wrote this step
+        (decode S=1 at cur; a chunk writes start..start+S-1). Only
+        those rows move pool-ward -- the rest of the gathered dense
+        view is discarded, so per-step traffic is O(S), not O(max_seq).
+        Dense state leaves are replaced wholesale (recurrent state has
+        no position axis).
+        """
+        B, S = positions.shape
+        ps = self.page_size
+        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+        page_ids = bt[rows, positions // ps]  # (B, S)
+        offs = positions % ps
+
+        def s(key, pool_leaf, dense_leaf):
+            if not _is_paged_key(key):
+                return dense_leaf
+            vals = dense_leaf[:, rows, positions]  # (n_units, B, S, ...)
+            return pool_leaf.at[:, page_ids, offs].set(
+                vals.astype(pool_leaf.dtype)
+            )
+
+        return self._map(s, tree, new_dense)
+
+    def splice(self, slot: int, dense_by_key: Dict[str, jnp.ndarray],
+               n_positions: int):
+        """Write a single-sequence (B=1) prefill cache into ``slot``.
+
+        ``dense_by_key`` maps leaf keys (as in ``cache_specs``) to
+        (n_units, 1, P, ...) KV leaves / (n_units, 1, ...) state
+        leaves. Paged leaves scatter rows 0..P-1 through the slot's
+        block table; state leaves land in its batch row. Host-side,
+        once per admission (recurrent-family fallback path).
+        """
+        bt = jnp.asarray(self.block_table[slot], jnp.int32)
+        pos = jnp.arange(n_positions, dtype=jnp.int32)
+        page_ids, offs = bt[pos // self.page_size], pos % self.page_size
+        new = []
+        for key, leaf in zip(self._keys, self._leaves):
+            d = dense_by_key.get(key)
+            if d is None:
+                new.append(leaf)
+                continue
+            if _is_paged_key(key):
+                vals = d[:, 0, :n_positions]
+                leaf = leaf.at[:, page_ids, offs].set(
+                    vals.astype(leaf.dtype)
+                )
+            else:
+                leaf = leaf.at[:, slot].set(d[:, 0].astype(leaf.dtype))
+            new.append(leaf)
+        self._leaves = new
+
+    def _map(self, fn, *trees):
+        flats = [jax.tree_util.tree_leaves(t) for t in trees]
+        out = [fn(k, *ls) for k, *ls in zip(self._keys, *flats)]
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    # ----------------------------------------------------- inspection --
+    def stats(self) -> Dict[str, int]:
+        return {
+            "n_pages": self.n_pages,
+            "free": len(self.free),
+            "page_size": self.page_size,
+            "owned": sum(len(o) for o in self._owned),
+        }

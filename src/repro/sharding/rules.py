@@ -151,7 +151,7 @@ _TP = 16  # model-axis size of the production meshes
 def _cache_leaf_spec(path: str, shape, batch) -> P:
     """Cache entries: (n_units, B, ...) -- batch over data axes; the kv
     seq dim over 'model' when divisible (context-parallel decode,
-    DESIGN.md §4), else replicated over model."""
+    docs/sharding.md), else replicated over model."""
     ndim = len(shape)
 
     def tp_if(axis):

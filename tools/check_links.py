@@ -6,7 +6,14 @@ verifies that every *relative* target resolves to an existing file (and
 that ``#anchors`` into markdown targets match a real heading), so a
 renamed module or a mistyped paper-equation reference fails the build.
 
-    python tools/check_links.py README.md docs src/repro/kernels/README.md
+Python files passed (or found under a directory with ``--py``) are
+scanned too: any markdown-file path mentioned in their source — which
+in practice means docstrings and comments pointing readers at docs —
+must resolve against the file's own directory, the repo root, or
+``src/repro``. This is what catches a docstring still citing a deleted
+design note.
+
+    python tools/check_links.py README.md docs --py src
 
 External links (http/https/mailto) are not fetched. Fenced code blocks
 and inline code spans are stripped before matching, so ASCII diagrams
@@ -23,6 +30,10 @@ LINK_RE = re.compile(r"\[([^\]]*)\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 FENCE_RE = re.compile(r"^(```|~~~)")
 INLINE_CODE_RE = re.compile(r"`[^`]*`")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+# A .md path in Python source: must start with an alphanumeric (so the
+# bare ".md" literals in this checker don't self-match) and may carry
+# a relative path prefix.
+PY_MD_RE = re.compile(r"[A-Za-z0-9_][A-Za-z0-9_./-]*\.md\b")
 
 
 def md_files(paths: Iterable[str]) -> List[str]:
@@ -107,11 +118,58 @@ def check_file(path: str) -> Tuple[List[Tuple[int, str, str]], int]:
     return problems, nlinks
 
 
+def py_files(paths: Iterable[str]) -> List[str]:
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                out.extend(
+                    os.path.join(root, n)
+                    for n in sorted(names) if n.endswith(".py")
+                )
+        elif p.endswith(".py"):
+            out.append(p)
+    return out
+
+
+def repo_root() -> str:
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def check_py_file(path: str) -> Tuple[List[Tuple[int, str, str]], int]:
+    """Every ``*.md`` path mentioned in a Python file (docstrings,
+    comments) must resolve relative to the file's directory, the repo
+    root, or ``src/repro``."""
+    problems, nrefs = [], 0
+    root = repo_root()
+    bases = [os.path.dirname(os.path.abspath(path)), root,
+             os.path.join(root, "src", "repro")]
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    for i, ln in enumerate(lines, 1):
+        for m in PY_MD_RE.finditer(ln):
+            nrefs += 1
+            target = m.group(0)
+            if not any(os.path.exists(os.path.join(b, target))
+                       for b in bases):
+                problems.append((i, target, "dangling .md reference"))
+    return problems, nrefs
+
+
 def main(argv: List[str]) -> int:
     if not argv:
         print(__doc__)
         return 2
-    files = md_files(argv)
+    py_roots = []
+    md_args = []
+    it = iter(argv)
+    for a in it:
+        if a == "--py":
+            py_roots.append(next(it, ""))
+        else:
+            md_args.append(a)
+    files = md_files(md_args)
+    pyfiles = py_files(py_roots)
     total_links, bad = 0, 0
     for path in files:
         probs, nlinks = check_file(path)
@@ -119,8 +177,14 @@ def main(argv: List[str]) -> int:
         for line, target, why in probs:
             print(f"{path}:{line}: {why}: {target}", file=sys.stderr)
             bad += 1
-    print(f"checked {len(files)} files, {total_links} links, "
-          f"{bad} broken")
+    for path in pyfiles:
+        probs, nrefs = check_py_file(path)
+        total_links += nrefs
+        for line, target, why in probs:
+            print(f"{path}:{line}: {why}: {target}", file=sys.stderr)
+            bad += 1
+    print(f"checked {len(files) + len(pyfiles)} files, "
+          f"{total_links} links, {bad} broken")
     return 1 if bad else 0
 
 

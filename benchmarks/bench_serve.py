@@ -19,6 +19,20 @@ every CI artifact):
   activation row block must be 16 (the bf16 TPU sublane minimum), i.e.
   decode GEMMs do NOT pad the slots axis to 128. The row carries
   ``decode_row_block`` as a gated counter.
+* ``kernel/serve_kv_cache_{bf16,fp8,mor}`` — KV-cache bytes per token
+  for each cache mode (docs/serving.md MoR KV tier). Two counters, both
+  deterministic and gated at threshold 0: ``kv_bytes_per_token`` is the
+  *physical* pool bytes one gather+scatter round trip moves per
+  position (a property of the lane dtypes), and for the MoR row
+  ``kv_bpe_milli_hot``/``kv_bpe_milli_cold`` are the *logical* payload
+  bytes-per-element of the hot (fp8 tag mixture, 1000 = 1.0 B) and cold
+  (sub4-recompressed, 562 = 0.5625 B) tiers. The lane asserts the
+  acceptance gates inline: hot bpe <= 1.05, cold bpe <= 0.65, and
+  MoR physical bytes strictly below bf16's.
+* ``kernel/flash_qoffset_interp`` — the PR-7 query-offset flash lane: a
+  short query chunk against a longer cache through the Pallas kernel
+  (interpret lowering, so the wall clock is time-exempt), parity-checked
+  against the dense oracle inline.
 
 Standalone: ``PYTHONPATH=src python -m benchmarks.bench_serve --json out.json``
 """
@@ -116,6 +130,87 @@ def bench_serve(rows, smoke: bool = False):
         "kernel/serve_decode_tile", 0.0,
         f"decode_row_block={rb};registered_grids={len(decode_grids)};"
         f"slots={scfg.slots}",
+    ))
+
+    bench_kv_cache(rows)
+    bench_flash_qoffset(rows)
+
+
+def bench_kv_cache(rows):
+    """Per-mode KV-cache bytes accounting + the PR-7 acceptance gates."""
+    from repro.models.attention import (
+        kv_bytes_per_element,
+        quantize_kv_mor,
+        recompress_kv_nvfp4,
+    )
+    from repro.serve import PagedKVPool
+
+    cfg = _serve_cfg()
+    pool_kw = dict(slots=4, max_seq=64, page_size=16)
+    bpt = {
+        "bf16": PagedKVPool(cfg, **pool_kw).bytes_per_token(),
+        "fp8": PagedKVPool(cfg, kv_fp8=True, **pool_kw).bytes_per_token(),
+        "mor": PagedKVPool(cfg, kv_mor=True, **pool_kw).bytes_per_token(),
+    }
+    # The point of the packed lanes: gather/scatter moves fewer bytes
+    # per position than the bf16 cache (payload u8 + tag + scale vs
+    # 2 B/elt values).
+    assert bpt["mor"] < bpt["bf16"], bpt
+
+    rng = np.random.default_rng(0)
+    x = np.asarray(rng.standard_normal((2, 32, cfg.n_kv, cfg.head_dim)),
+                   np.float32)
+    hot = quantize_kv_mor(x)
+    hot_bpe = float(kv_bytes_per_element(hot[1]))
+    cold_bpe = float(kv_bytes_per_element(recompress_kv_nvfp4(*hot)[1]))
+    assert hot_bpe <= 1.05, hot_bpe    # hot tier: fp8 arms only
+    assert cold_bpe <= 0.65, cold_bpe  # cold tier: sub4 nibbles+micros
+
+    for mode in ("bf16", "fp8", "mor"):
+        derived = f"kv_bytes_per_token={bpt[mode]}"
+        if mode == "mor":
+            derived += (
+                f";kv_bpe_milli_hot={int(hot_bpe * 1000)}"
+                f";kv_bpe_milli_cold={int(cold_bpe * 1000)}"
+                f";bytes_vs_bf16={bpt['bf16'] / bpt['mor']:.2f}x"
+            )
+        rows.append(csv_row(f"kernel/serve_kv_cache_{mode}", 0.0, derived))
+
+
+def bench_flash_qoffset(rows):
+    """Query-offset flash lane: an S < T chunk against a longer cache
+    (the chunked-prefill shape) through the Pallas kernel, parity-
+    checked against a dense oracle. Interpret lowering: the row name's
+    ``_interp`` fragment makes the wall clock advisory in compare."""
+    from repro.kernels.flash_attention import flash_attention_fwd
+
+    BH, S, T, d = 8, 16, 128, 64
+    rng = np.random.default_rng(1)
+    q, k, v = (np.asarray(rng.standard_normal(s), np.float32)
+               for s in ((BH, S, d), (BH, T, d), (BH, T, d)))
+    f = lambda: flash_attention_fwd(
+        jax.numpy.asarray(q), jax.numpy.asarray(k), jax.numpy.asarray(v),
+        causal=True, block_q=16, block_k=64, interpret=True,
+    )
+    out = np.asarray(f(), np.float32)  # warm the trace
+    t0 = time.time()
+    reps = 3
+    for _ in range(reps):
+        f().block_until_ready()
+    us = (time.time() - t0) / reps * 1e6
+
+    s = np.einsum("bsd,btd->bst", q, k) * d**-0.5
+    q_pos = (T - S) + np.arange(S)  # default offset: last q at last k
+    s = np.where(np.arange(T)[None, None, :] <= q_pos[None, :, None],
+                 s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    ref = np.einsum("bst,btd->bsd", p, v)
+    err = float(np.max(np.abs(out - ref)))
+    assert err < 1e-4, f"flash q_offset diverged from oracle: {err}"
+    rows.append(csv_row(
+        "kernel/flash_qoffset_interp", us,
+        f"BH={BH};S={S};T={T};d={d};max_err={err:.1e}",
     ))
 
 

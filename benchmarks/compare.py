@@ -56,6 +56,13 @@ COUNTER_KEYS = (
     # (extra engine steps, slots axis padded toward 128) is structural.
     "steps",
     "decode_row_block",
+    # KV-cache tier: physical pool bytes gathered+scattered per
+    # position (a property of the lane dtypes) and the logical payload
+    # bytes-per-element implied by the tag mixture, in milli-bytes
+    # (hot fp8 arms = 1000, cold sub4 = 562). All deterministic.
+    "kv_bytes_per_token",
+    "kv_bpe_milli_hot",
+    "kv_bpe_milli_cold",
 )
 
 # Name fragments of lanes whose wall clock is interpreter- or

@@ -7,11 +7,11 @@ slow lane runs ``python -m benchmarks.schema bench_kernels.json`` after
 the bench smoke, so a drifting producer fails the build instead of
 silently breaking downstream consumers.
 
-Schema ``repro.bench_kernels/v2`` (current; the validator also accepts
-``v1`` artifacts so stored history keeps validating)::
+Schema ``repro.bench_kernels/v3`` (current; the validator also accepts
+``v1``/``v2`` artifacts so stored history keeps validating)::
 
     {
-      "schema": "repro.bench_kernels/v2",
+      "schema": "repro.bench_kernels/v3",
       "rows": [
         {"name": "kernel/<lane>_<variant>[_<size>]",   # row id
          "us":   12.3,                                  # mean wall us/call
@@ -22,7 +22,11 @@ Schema ``repro.bench_kernels/v2`` (current; the validator also accepts
 v2 extends v1 only by contract, not by shape: producers must emit at
 least one ``kernel/gemm_nvfp4_*`` row when the bench runs the sub4
 (NVFP4) recipe lane (``--recipe sub4`` or the default full matrix),
-and the version string bumps. Row grammar is unchanged:
+and the version string bumps. v3 is additive the same way: when the
+serving lane runs, producers must emit the ``kernel/serve_kv_cache_*``
+rows (per-mode KV-cache bytes-per-token counters: bf16 / kv_fp8 /
+kv_mor) and a ``kernel/flash_qoffset_*`` row (the query-offset flash
+parity lane). Row grammar is unchanged across all versions:
 
 * ``name`` matches ``^kernel/[A-Za-z0-9._-]+$`` and is unique per
   artifact.
@@ -44,12 +48,13 @@ from typing import Any, Dict, List
 
 SCHEMA_V1 = "repro.bench_kernels/v1"
 SCHEMA_V2 = "repro.bench_kernels/v2"
-SCHEMA = SCHEMA_V2
-ACCEPTED_SCHEMAS = (SCHEMA_V1, SCHEMA_V2)
+SCHEMA_V3 = "repro.bench_kernels/v3"
+SCHEMA = SCHEMA_V3
+ACCEPTED_SCHEMAS = (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3)
 _NAME_RE = re.compile(r"^kernel/[A-Za-z0-9._-]+$")
 
 __all__ = [
-    "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "ACCEPTED_SCHEMAS",
+    "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "SCHEMA_V3", "ACCEPTED_SCHEMAS",
     "make_artifact", "validate_artifact", "rows_from_csv",
 ]
 
@@ -70,7 +75,7 @@ def make_artifact(csv_rows: List[str]) -> Dict[str, Any]:
 
 def validate_artifact(doc: Any) -> None:
     """Raise ValueError unless ``doc`` conforms to an accepted schema
-    version (v1 or v2 -- the row grammar is shared)."""
+    version (v1/v2/v3 -- the row grammar is shared)."""
     if not isinstance(doc, dict):
         raise ValueError(f"artifact must be an object, got {type(doc)}")
     extra = set(doc) - {"schema", "rows"}

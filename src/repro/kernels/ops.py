@@ -598,13 +598,61 @@ def sharded_mixed_gemm(
     return out[: a.shape[0], : b.shape[0]]
 
 
-def flash_attention(q, k, v, *, causal=True, block_q=512, block_k=512,
-                    backend: str = "auto"):
-    """q/k/v: (BH, S|T, d) head-folded layout."""
+def flash_attention(q, k, v, *, causal=True, q_offset=None,
+                    block_q=512, block_k=512, backend: str = "auto"):
+    """Backend-dispatched flash attention.
+
+    Two accepted layouts:
+
+    * 4-D GQA contract -- q ``(B, S, Hq, dh)`` against k/v
+      ``(B, T, Hkv, dh)`` with ``Hq % Hkv == 0``: kv heads are repeated
+      into the q-head count here (each q head ``h`` reads kv head
+      ``h // (Hq // Hkv)``), operands fold to ``(B*Hq, S|T, dh)`` for
+      the kernel, and the output unfolds back to ``(B, S, Hq, dh)``.
+      ``q_offset`` may be a scalar or per-batch-row ``(B,)``.
+    * 3-D pre-folded ``(BH, S|T, d)`` passthrough (head counts already
+      matched by the caller); ``q_offset`` scalar or ``(BH,)``.
+
+    ``q_offset`` is the key position of query row 0 (default: last
+    query aligned with last key, i.e. ``T - S``) -- see
+    ``flash_attention_fwd``.
+    """
+    if q.ndim == 4:
+        B, S, Hq, dh = q.shape
+        if k.ndim != 4 or v.ndim != 4 or k.shape != v.shape:
+            raise ValueError(
+                f"4-D q needs matching 4-D k/v, got k{k.shape} v{v.shape}"
+            )
+        T, Hkv = k.shape[1], k.shape[2]
+        if k.shape != (B, T, Hkv, dh) or Hq % Hkv:
+            raise ValueError(
+                f"GQA contract wants k/v (B={B}, T, Hkv, dh={dh}) with "
+                f"Hq={Hq} divisible by Hkv, got k{k.shape}"
+            )
+        G = Hq // Hkv
+
+        def fold(x):  # (B, L, H, dh) -> (B*H, L, dh)
+            H = x.shape[2]
+            return jnp.moveaxis(x, 2, 1).reshape(B * H, x.shape[1], dh)
+
+        qf = fold(q)
+        kf = fold(jnp.repeat(k, G, axis=2) if G > 1 else k)
+        vf = fold(jnp.repeat(v, G, axis=2) if G > 1 else v)
+        off = q_offset
+        if off is not None:
+            off = jnp.asarray(off, jnp.int32).reshape(-1)
+            if off.shape[0] == B and B != B * Hq:
+                off = jnp.repeat(off, Hq)
+        out = flash_attention(
+            qf, kf, vf, causal=causal, q_offset=off,
+            block_q=block_q, block_k=block_k, backend=backend,
+        )
+        return jnp.moveaxis(out.reshape(B, Hq, S, dh), 1, 2)
     be = resolve_backend(backend)
     if be == "xla":
-        return _ref.flash_attention_ref(q, k, v, causal)
+        return _ref.flash_attention_ref(q, k, v, causal, q_offset=q_offset)
     return flash_attention_fwd(
-        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        q, k, v, causal=causal, q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
         interpret=(be == "interpret"),
     )

@@ -772,17 +772,30 @@ def fp8_gemm_ref(
 
 
 def flash_attention_ref(
-    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True,
+    q_offset=None,
 ) -> jnp.ndarray:
-    """Naive softmax attention. q: (BH, S, d), k/v: (BH, T, d)."""
-    S, d = q.shape[1], q.shape[2]
+    """Naive softmax attention. q: (BH, S, d), k/v: (BH, T, d).
+
+    ``q_offset``: key position of query row 0, scalar or (BH,) per-row;
+    default aligns the last query with the last key (offset ``T - S``,
+    the historical ``tril(k=T-S)`` mask). Ignored when not causal.
+    """
+    BH, S, d = q.shape
     T = k.shape[1]
     s = jnp.einsum(
         "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
     ) * (d**-0.5)
     if causal:
-        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
-        s = jnp.where(mask[None], s, -1e30)
+        off = jnp.broadcast_to(
+            jnp.asarray(
+                T - S if q_offset is None else q_offset, jnp.int32
+            ).reshape(-1),
+            (BH,),
+        )
+        q_pos = off[:, None] + jnp.arange(S)  # (BH, S)
+        mask = jnp.arange(T)[None, None, :] <= q_pos[:, :, None]
+        s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum(
         "bqk,bkd->bqd", p, v.astype(jnp.float32)

@@ -17,9 +17,37 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.formats import (
+    E2M1_AMAX,
+    E4M3,
+    E5M2,
+    NVFP4,
+    NVFP4_MICRO,
+    cast_to_format,
+    decode_e2m1,
+    encode_e2m1,
+    round_to_e2m1,
+)
+from repro.core.gam import scales_from_bmax
+from repro.kernels.ref import (
+    TAG_BF16,
+    TAG_E4M3,
+    TAG_E5M2,
+    TAG_NVFP4,
+    pack_mixed,
+)
+
 from .common import constrain, pick_chunk
 
-__all__ = ["flash_attention", "decode_attention"]
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "quantize_kv",
+    "quantize_kv_mor",
+    "recompress_kv_nvfp4",
+    "kv_bytes_per_element",
+    "kv_stats_row",
+]
 
 _NEG = -1e30
 
@@ -130,6 +158,45 @@ def flash_attention(
     return out.astype(q.dtype)
 
 
+def _mor_kv_values(payload: jnp.ndarray, tags: jnp.ndarray) -> jnp.ndarray:
+    """Tag-select decode of a MoR KV payload into scaled-space f32.
+
+    ``payload``: (..., dh) uint8; ``tags``: (...) per-(position, head)
+    representation tags. E4M3/E5M2 bytes bitcast per tag (the mixture
+    generalization of the fp8 path's monolithic e4m3 cast). TAG_NVFP4
+    rows (cold sub4 pages) keep packed E2M1 nibbles in bytes
+    [0, dh/2) and E4M3 micro-scale bytes (one per NVFP4_MICRO elements)
+    at [dh/2, dh/2 + dh/16) -- decoded here with micro scales folded in
+    (they vary along the contraction axis so they cannot fold into
+    score space; the per-block scale can, and does, downstream).
+    Values stay in scaled space: the caller divides scores (or
+    probabilities) by the per-(position, head) block scale.
+    """
+    e4 = jax.lax.bitcast_convert_type(
+        payload, jnp.float8_e4m3fn
+    ).astype(jnp.float32)
+    e5 = jax.lax.bitcast_convert_type(
+        payload, jnp.float8_e5m2
+    ).astype(jnp.float32)
+    t = tags[..., None]
+    vals = jnp.where(t == TAG_E5M2, e5, e4)
+    dh = payload.shape[-1]
+    if dh % NVFP4_MICRO == 0:
+        nh = dh // 2
+        codes = payload[..., :nh]
+        lo = decode_e2m1(codes & jnp.uint8(0xF))
+        hi = decode_e2m1(codes >> 4)
+        pairs = jnp.stack([lo, hi], axis=-1).reshape(payload.shape)
+        ms = jax.lax.bitcast_convert_type(
+            payload[..., nh:nh + dh // NVFP4_MICRO], jnp.float8_e4m3fn
+        ).astype(jnp.float32)
+        micro = jnp.repeat(
+            jnp.where(ms > 0, ms, 1.0), NVFP4_MICRO, axis=-1
+        )
+        vals = jnp.where(t == TAG_NVFP4, pairs * micro, vals)
+    return vals
+
+
 def decode_attention(
     q: jnp.ndarray,
     k_cache: jnp.ndarray,
@@ -139,6 +206,8 @@ def decode_attention(
     window: int = 0,
     k_scale: jnp.ndarray = None,
     v_scale: jnp.ndarray = None,
+    k_tags: jnp.ndarray = None,
+    v_tags: jnp.ndarray = None,
 ) -> jnp.ndarray:
     """Attention for decode / chunked prefill against a KV cache.
 
@@ -159,16 +228,29 @@ def decode_attention(
     scales factor out of both einsums -- scores divide by k_scale after
     the QK dot, and v_scale folds into the probabilities -- so the
     dequant never materializes a full-precision cache copy.
+
+    MoR caches (docs/numerics.md): uint8 payloads + per-(position,
+    head) ``k_tags``/``v_tags`` choose E4M3 / E5M2 / NVFP4 per block;
+    scales fold into score space exactly as the fp8 path, the payload
+    decode is the tag-select in :func:`_mor_kv_values`.
+
+    Garbage hygiene (quantized caches): the score dequant divide is
+    folded *inside* the validity mask (garbage scales from trash/stale
+    pages never touch a surviving score), and value rows beyond each
+    row's own position are zeroed before the PV einsum -- a masked
+    probability is exactly 0, but ``0 * NaN`` (NaN/Inf payload bytes in
+    the trash page) is NaN and would otherwise poison the whole output
+    row. A bf16 cache only ever holds finite computed values, so its
+    path keeps the original (guard-free) graph.
     """
     B, S, Hq, dh = q.shape
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     scale = dh**-0.5
     qg = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, G, dh)
-    s = jnp.einsum("bshgd,bkhd->bhgsk", qg, k_cache.astype(jnp.float32))
-    if k_scale is not None:
-        ks = jnp.where(k_scale > 0, k_scale, 1.0)  # empty slots: scale 0
-        s = s / jnp.moveaxis(ks, 1, 2)[:, :, None, None, :]  # (B,Hkv,1,1,T)
+    kv = (_mor_kv_values(k_cache, k_tags) if k_tags is not None
+          else k_cache.astype(jnp.float32))
+    s = jnp.einsum("bshgd,bkhd->bhgsk", qg, kv)
     cur = jnp.broadcast_to(
         jnp.atleast_1d(jnp.asarray(cur_index, jnp.int32)), (B,)
     )
@@ -177,12 +259,33 @@ def decode_attention(
     valid = k_pos[None, None, :] <= q_pos[:, :, None]  # (B, S, T)
     if window:
         valid &= k_pos[None, None, :] > q_pos[:, :, None] - window
-    s = jnp.where(valid[:, None, None], s, _NEG)
+    vmask = valid[:, None, None]  # (B, 1, 1, S, T)
+    if k_scale is not None:
+        # Mask-before-divide: garbage scales read from trash/stale
+        # pages (NaN, denormal, inf) must never reach a kept score.
+        ks = jnp.where(k_scale > 0, k_scale, 1.0)  # empty slots: scale 0
+        s = jnp.where(
+            vmask, s / jnp.moveaxis(ks, 1, 2)[:, :, None, None, :], _NEG
+        )
+    else:
+        s = jnp.where(vmask, s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     if v_scale is not None:
         vs = jnp.where(v_scale > 0, v_scale, 1.0)
-        p = p / jnp.moveaxis(vs, 1, 2)[:, :, None, None, :]
-    out = jnp.einsum("bhgsk,bkhd->bshgd", p, v_cache.astype(jnp.float32))
+        p = jnp.where(
+            vmask, p / jnp.moveaxis(vs, 1, 2)[:, :, None, None, :], 0.0
+        )
+    vv = (_mor_kv_values(v_cache, v_tags) if v_tags is not None
+          else v_cache.astype(jnp.float32))
+    if v_tags is not None or v_scale is not None:
+        # Value rows no query of this step can see are garbage by
+        # contract; zero them so 0-probability lanes cannot contribute
+        # 0 * NaN. Only quantized caches need this: their payload bytes
+        # / scales can decode to NaN or Inf (trash page, stale rows),
+        # while a bf16 cache only ever holds finite computed values.
+        k_any = k_pos[None, :] <= cur[:, None]  # (B, T)
+        vv = jnp.where(k_any[:, :, None, None], vv, 0.0)
+    out = jnp.einsum("bhgsk,bkhd->bshgd", p, vv)
     return out.reshape(B, S, Hq, dh).astype(q.dtype)
 
 
@@ -194,3 +297,154 @@ def quantize_kv(x: jnp.ndarray):
         x.astype(jnp.float32) * s[..., None], -448.0, 448.0
     ).astype(jnp.float8_e4m3fn)
     return payload, s
+
+
+# ------------------------------------------------------- MoR KV cache --
+# The cache tier's MoR block is one (position, head) row: the
+# contraction axis of both attention einsums is dh, so a block scale is
+# constant across everything a score sums over and folds into score
+# space -- the same property the fp8 path's per-(position, head) scales
+# exploit. Pages tile this grid exactly (a page is page_size * Hkv
+# whole blocks), so per-page requantization never splits a block.
+#
+# The hot mixture is the two fp8 arms of the §3.2 cascade (Eq. 3 error
+# comparison per block); the BF16 fallback arm is deliberately absent
+# from the *storage*: a serving cache must bound bytes per token, and
+# the E5M2 arm already covers the high-dynamic-range blocks BF16 would
+# catch. TAG_BF16 remains representable (decode treats unknown tags as
+# E4M3 only through explicit tag equality, so a BF16 tag simply never
+# matches) and TAG_NVFP4 marks cold sub4-recompressed pages.
+
+
+def quantize_kv_mor(x: jnp.ndarray, with_stats: bool = False):
+    """MoR-quantize KV rows: (B, S, H, dh) -> (payload, tags, scales).
+
+    Per (position, head) block: both GAM fp8 candidates, the Eq. 3
+    relative-error comparison, and the winner's real payload bytes --
+    routed through the same ``scales_from_bmax`` / ``pack_mixed``
+    primitives as ``quantize_pack``, so cache bytes are bit-identical
+    to what the GEMM-side packer would emit for the same tags.
+
+    Returns ``(payload (B,S,H,dh) u8, tags (B,S,H) u8, scales (B,S,H)
+    f32)``; scales are always > 0 for written rows (unwritten cache
+    rows keep their zero-initialized scale, the emptiness marker the
+    decode guard keys on). With ``with_stats``, also returns a
+    STATS_WIDTH stats row (:func:`kv_stats_row`).
+    """
+    B, S, H, dh = x.shape
+    x2 = x.astype(jnp.float32).reshape(B * S * H, dh)
+    bmax = jnp.max(jnp.abs(x2), axis=-1, keepdims=True)  # (R, 1)
+    s4 = scales_from_bmax(bmax, E4M3, "gam").scale
+    s5 = scales_from_bmax(bmax, E5M2, "gam").scale
+
+    nz = x2 != 0
+    safe = jnp.where(nz, x2, 1.0)
+
+    def err(s, fmt):
+        dq = cast_to_format(
+            jnp.clip(x2 * s, -fmt.amax, fmt.amax), fmt
+        ) / s
+        return jnp.sum(
+            jnp.where(nz, jnp.abs((x2 - dq) / safe), 0.0), axis=-1
+        )
+
+    e4 = err(s4, E4M3)
+    e5 = err(s5, E5M2)
+    sel = jnp.where(e4 < e5, TAG_E4M3, TAG_E5M2)  # Eq. 3, two fp8 arms
+    mo = pack_mixed(x2, sel.reshape(-1, 1), (1, dh))
+    payload = mo.payload_q.reshape(B, S, H, dh)
+    tags = sel.astype(jnp.uint8).reshape(B, S, H)
+    scales = mo.scales.astype(jnp.float32).reshape(B, S, H)
+    if with_stats:
+        return payload, tags, scales, kv_stats_row(tags)
+    return payload, tags, scales
+
+
+def recompress_kv_nvfp4(payload: jnp.ndarray, tags: jnp.ndarray,
+                        scales: jnp.ndarray):
+    """Sub4-recompress cold KV rows in place of their fp8 payloads.
+
+    ``payload`` (..., H, dh) u8, ``tags``/``scales`` (..., H): any
+    leading shape (the pool passes whole page slabs). Each
+    (position, head) block re-encodes from its stored hot-tier values
+    to the two-level NVFP4 representation -- packed E2M1 nibble pairs
+    in payload bytes [0, dh/2), E4M3 micro-scale bytes (one per
+    NVFP4_MICRO elements) at [dh/2, dh/2 + dh/16), remainder zero --
+    so a cold page occupies 0.5625 logical bytes per element inside
+    the same lane. Requires ``dh % NVFP4_MICRO == 0``.
+    """
+    dh = payload.shape[-1]
+    if dh % NVFP4_MICRO:
+        raise ValueError(
+            f"sub4 KV recompression needs head_dim divisible by "
+            f"{NVFP4_MICRO}, got {dh}"
+        )
+    ss = jnp.where(scales > 0, scales, 1.0)[..., None]
+    vals = _mor_kv_values(payload, tags) / ss  # stored true values
+    bmax = jnp.max(jnp.abs(vals), axis=-1, keepdims=True)
+    s_nv = scales_from_bmax(bmax, NVFP4, "gam").scale
+    xs = vals * s_nv
+    g = xs.reshape(*xs.shape[:-1], dh // NVFP4_MICRO, NVFP4_MICRO)
+    d = jnp.max(jnp.abs(g), axis=-1) / E2M1_AMAX
+    d_q = cast_to_format(d, E4M3)
+    safe_d = jnp.where(d_q > 0, d_q, 1.0)
+    codes = encode_e2m1(
+        round_to_e2m1(g / safe_d[..., None])
+    ).reshape(xs.shape).astype(jnp.uint8)
+    nib = (codes[..., 0::2] | (codes[..., 1::2] << 4)).astype(jnp.uint8)
+    ms = jax.lax.bitcast_convert_type(
+        safe_d.astype(jnp.float8_e4m3fn), jnp.uint8
+    )
+    pad = jnp.zeros(
+        (*payload.shape[:-1], dh - dh // 2 - dh // NVFP4_MICRO),
+        jnp.uint8,
+    )
+    new_payload = jnp.concatenate([nib, ms, pad], axis=-1)
+    new_tags = jnp.full_like(tags, TAG_NVFP4)
+    return new_payload, new_tags, s_nv[..., 0].astype(jnp.float32)
+
+
+# Logical payload bytes per cache element by tag (fp8 byte, BF16 pair,
+# NVFP4 nibble + its amortized micro-scale byte).
+_TAG_BPE = {
+    TAG_E4M3: 1.0,
+    TAG_E5M2: 1.0,
+    TAG_BF16: 2.0,
+    TAG_NVFP4: 0.5 + 1.0 / NVFP4_MICRO,
+}
+
+
+def kv_bytes_per_element(tags: jnp.ndarray) -> jnp.ndarray:
+    """Mean logical payload bytes per element implied by ``tags``."""
+    t = jnp.asarray(tags).reshape(-1).astype(jnp.int32)
+    bpe = jnp.zeros(t.shape, jnp.float32)
+    for tag, b in _TAG_BPE.items():
+        bpe = jnp.where(t == tag, b, bpe)
+    return jnp.mean(bpe)
+
+
+def kv_stats_row(tags: jnp.ndarray) -> jnp.ndarray:
+    """One STATS_WIDTH v2 stats row for a KV-cache quantization event.
+
+    Same layout as the GEMM events (core.mor): [0] decision (1.0, the
+    cache tier always quantizes), [3..5] frac_e4m3/e5m2/bf16, [6] block
+    count, [7] m_g slot (1.0 -- per-event group), [8] frac_nvfp4,
+    [9] micro-scale bytes per element. [1]/[2] (rel_err, amax) are 0:
+    the cache path never re-reads its operand to price the error.
+    """
+    from repro.core.mor import STATS_WIDTH
+
+    t = jnp.asarray(tags).reshape(-1).astype(jnp.int32)
+    n = t.size
+    frac = lambda tag: jnp.mean((t == tag).astype(jnp.float32))
+    f_nv = frac(TAG_NVFP4)
+    row = jnp.zeros((STATS_WIDTH,), jnp.float32)
+    row = row.at[0].set(1.0)
+    row = row.at[3].set(frac(TAG_E4M3))
+    row = row.at[4].set(frac(TAG_E5M2))
+    row = row.at[5].set(frac(TAG_BF16))
+    row = row.at[6].set(float(n))
+    row = row.at[7].set(1.0)
+    row = row.at[8].set(f_nv)
+    row = row.at[9].set(f_nv / NVFP4_MICRO)
+    return row

@@ -94,8 +94,31 @@ def attn_sublayer(
             k = apply_rope(k, pos, cfg.rope_theta)
         rows = jnp.arange(B, dtype=jnp.int32)[:, None]
         upd = lambda buf, val: buf.at[rows, pos].set(val.astype(buf.dtype))
-        fp8_cache = "k_scale" in cache
-        if fp8_cache:
+        mor_cache = "k_tags" in cache
+        fp8_cache = (not mor_cache) and "k_scale" in cache
+        if mor_cache:
+            # MoR cache tier: per-(position, head) tag-select between
+            # the fp8 arms + GAM scales (docs/numerics.md); decode
+            # folds the scales into score space per tag.
+            from .attention import quantize_kv_mor
+
+            k_pay, k_t, k_s = quantize_kv_mor(k)
+            v_pay, v_t, v_s = quantize_kv_mor(v)
+            new_cache = {
+                "k": upd(cache["k"], k_pay),
+                "v": upd(cache["v"], v_pay),
+                "k_tags": upd(cache["k_tags"], k_t),
+                "v_tags": upd(cache["v_tags"], v_t),
+                "k_scale": upd(cache["k_scale"], k_s),
+                "v_scale": upd(cache["v_scale"], v_s),
+            }
+            out = decode_attention(
+                q, new_cache["k"], new_cache["v"], cur,
+                window=window, k_scale=new_cache["k_scale"],
+                v_scale=new_cache["v_scale"],
+                k_tags=new_cache["k_tags"], v_tags=new_cache["v_tags"],
+            )
+        elif fp8_cache:
             from .attention import quantize_kv
 
             k_pay, k_s = quantize_kv(k)

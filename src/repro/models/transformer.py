@@ -289,9 +289,24 @@ def make_tokens(cfg: ArchConfig):
 
 # ================================================================= cache ==
 def _layer_cache_spec(t: str, cfg: ArchConfig, b: int, s: int,
-                      kv_fp8: bool = False):
+                      kv_fp8: bool = False, kv_mor: bool = False):
     hkv, hd = cfg.n_kv, cfg.head_dim
-    if kv_fp8:
+    if kv_fp8 and kv_mor:
+        raise ValueError("kv_fp8 and kv_mor are mutually exclusive")
+    if kv_mor:
+        # MoR cache tier (docs/numerics.md): uint8 payload lanes with
+        # per-(position, head) representation tags + GAM scales --
+        # per-block E4M3/E5M2 selection hot, NVFP4 sub4 when pages go
+        # cold (tags/scales are the MixedOperand lanes of a page).
+        kv = {
+            "k": jax.ShapeDtypeStruct((b, s, hkv, hd), jnp.uint8),
+            "v": jax.ShapeDtypeStruct((b, s, hkv, hd), jnp.uint8),
+            "k_tags": jax.ShapeDtypeStruct((b, s, hkv), jnp.uint8),
+            "v_tags": jax.ShapeDtypeStruct((b, s, hkv), jnp.uint8),
+            "k_scale": jax.ShapeDtypeStruct((b, s, hkv), jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct((b, s, hkv), jnp.float32),
+        }
+    elif kv_fp8:
         # Beyond-paper: E4M3 payload + per-(position, head) f32 scales
         # (halves the decode cache; see models.attention.decode_attention).
         kv = {
@@ -347,21 +362,22 @@ def _layer_cache_spec(t: str, cfg: ArchConfig, b: int, s: int,
 
 
 def cache_specs(cfg: ArchConfig, batch: int, seq: int,
-                kv_fp8: bool = False):
+                kv_fp8: bool = False, kv_mor: bool = False):
     """ShapeDtypeStruct pytree for the decode cache (stacked over units)."""
     stack = lambda spec: jax.tree.map(
         lambda x: jax.ShapeDtypeStruct((cfg.n_units, *x.shape), x.dtype), spec
     )
     return {
-        t: stack(_layer_cache_spec(t, cfg, batch, seq, kv_fp8))
+        t: stack(_layer_cache_spec(t, cfg, batch, seq, kv_fp8, kv_mor))
         for t in _unit_types(cfg)
     }
 
 
-def init_cache(cfg: ArchConfig, batch: int, seq: int, kv_fp8: bool = False):
+def init_cache(cfg: ArchConfig, batch: int, seq: int, kv_fp8: bool = False,
+               kv_mor: bool = False):
     return jax.tree.map(
         lambda s: jnp.zeros(s.shape, s.dtype),
-        cache_specs(cfg, batch, seq, kv_fp8),
+        cache_specs(cfg, batch, seq, kv_fp8, kv_mor),
     )
 
 

@@ -40,7 +40,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import MoRDotPolicy, MoRPolicy
 from repro.models import make_decode_fn, make_prefill_fn, make_tokens
-from repro.models.attention import quantize_kv
+from repro.models.attention import quantize_kv, quantize_kv_mor
 
 from .paged import PagedKVPool
 from .quantized import quantize_params
@@ -84,6 +84,15 @@ class ServeConfig:
     # chunk per prefilling slot per engine step.
     prefill_chunk: int = 32
     kv_fp8: bool = False
+    # MoR cache tier (docs/numerics.md): per-(position, head) tag-select
+    # E4M3/E5M2 payloads + GAM scales instead of the monolithic fp8
+    # cast. Mutually exclusive with kv_fp8.
+    kv_mor: bool = False
+    # Cold-page policy: with kv_mor, a page is sub4-recompressed (E2M1
+    # nibbles + micro scales, 0.5625 logical B/elt) once a slot's write
+    # frontier is at least this many positions past the page's end.
+    # None disables sealing. Requires head_dim % 16 == 0.
+    kv_mor_cold: Optional[int] = None
     # P >= max_seq at submit: 'reject' raises PromptTooLongError,
     # 'truncate' keeps the first max_seq - 1 tokens and records the
     # truncation on request.error.
@@ -124,6 +133,10 @@ class Engine:
                 f"prefill_chunk {scfg.prefill_chunk} must divide "
                 f"max_seq {scfg.max_seq}"
             )
+        if scfg.kv_fp8 and scfg.kv_mor:
+            raise ValueError("kv_fp8 and kv_mor are mutually exclusive")
+        if scfg.kv_mor_cold is not None and not scfg.kv_mor:
+            raise ValueError("kv_mor_cold needs kv_mor=True")
         self.cfg = cfg
         self.scfg = scfg
         self.qstats = None
@@ -152,7 +165,9 @@ class Engine:
         self.pool = PagedKVPool(
             cfg, scfg.slots, scfg.max_seq, page_size=scfg.page_size,
             kv_fp8=scfg.kv_fp8, n_pages=scfg.pool_pages,
+            kv_mor=scfg.kv_mor,
         )
+        self._sealed = set()  # (slot, page_index) sub4-recompressed
         # Chunked prefill needs every cache leaf positional (pageable);
         # recurrent-state families prefill in one shot at admission.
         self.chunked_prefill = self.pool.all_paged and self.pool.has_paged
@@ -260,6 +275,14 @@ class Engine:
                     pay, sc = quantize_kv(by_key[key])
                     by_key[key] = pay
                     by_key[key + "_scale"] = sc
+        elif self.scfg.kv_mor:
+            for key in list(by_key):
+                last = key.rsplit("/", 1)[-1]
+                if last in ("k", "v"):
+                    pay, tags, sc = quantize_kv_mor(by_key[key])
+                    by_key[key] = pay
+                    by_key[key + "_tags"] = tags
+                    by_key[key + "_scale"] = sc
         self.pool.splice(slot, by_key, len(req.prompt))
         self._start_decode(slot, req, len(req.prompt),
                            np.asarray(logits[0, -1], np.float32))
@@ -361,6 +384,34 @@ class Engine:
         self.slot_next[slot] = 0
         self.slot_filled[slot] = 0
         self.pool.release(slot)
+        self._sealed = {(s, j) for s, j in self._sealed if s != slot}
+
+    # ---------------------------------------------------- MoR cold tier --
+    def _seal_cold_pages(self):
+        """Sub4-recompress pages a decode slot's write frontier has
+        left at least ``kv_mor_cold`` positions behind. Sealed pages
+        are never written again while owned (positions only grow), so
+        the one-way fp8 -> NVFP4 recompression is safe; the set resets
+        when the slot's pages are released."""
+        lag = self.scfg.kv_mor_cold
+        ps = self.pool.page_size
+        cold: List[int] = []
+        for i in range(self.scfg.slots):
+            if self.slot_state[i] != "decode":
+                continue
+            frontier = int(self.slot_pos[i])
+            for j, page in enumerate(self.pool.block_table[i]):
+                if page == self.pool.trash or (i, j) in self._sealed:
+                    continue
+                if (j + 1) * ps + lag <= frontier:
+                    cold.append(int(page))
+                    self._sealed.add((i, j))
+        if cold:
+            self.pool.recompress_pages(cold)
+
+    def kv_cache_stats(self):
+        """Tag census / bytes-per-element of the live cache (kv_mor)."""
+        return self.pool.kv_cache_stats()
 
     # -------------------------------------------------------------- step --
     def step(self) -> bool:
@@ -378,6 +429,8 @@ class Engine:
         if dec:
             self._decode_batch(dec)
             worked = True
+        if worked and self.scfg.kv_mor_cold is not None:
+            self._seal_cold_pages()
         if worked:
             self.steps += 1
         return worked or bool(self.queue)

@@ -43,6 +43,26 @@ __all__ = ["PagedKVPool", "MOR_BLOCK_ROWS"]
 MOR_BLOCK_ROWS = 128  # Partition("block").block_shape[0]
 
 
+@jax.jit
+def _recompress_slab(payload, tags, scales, idx):
+    """Sub4-recompress the pages ``idx`` of one paged KV lane group.
+
+    Leaves are pool-shaped -- payload (n_units, n_pages+1, ps, hkv,
+    hd), tags/scales (n_units, n_pages+1, ps, hkv) -- and the update
+    touches only the selected pages. Jitted once per idx length (the
+    engine seals pages one boundary at a time)."""
+    from repro.models.attention import recompress_kv_nvfp4
+
+    pay, tg, sc = recompress_kv_nvfp4(
+        payload[:, idx], tags[:, idx], scales[:, idx]
+    )
+    return (
+        payload.at[:, idx].set(pay),
+        tags.at[:, idx].set(tg.astype(tags.dtype)),
+        scales.at[:, idx].set(sc.astype(scales.dtype)),
+    )
+
+
 def _leaf_key(path) -> str:
     return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                     for k in path)
@@ -52,7 +72,7 @@ def _is_paged_key(key: str) -> bool:
     """KV leaves with a max_seq position axis; xk/xv (encoder cross-KV,
     enc_seq axis) and recurrent state stay dense."""
     last = key.rsplit("/", 1)[-1]
-    return last in ("k", "v", "k_scale", "v_scale")
+    return last in ("k", "v", "k_scale", "v_scale", "k_tags", "v_tags")
 
 
 class PagedKVPool:
@@ -67,7 +87,7 @@ class PagedKVPool:
 
     def __init__(self, cfg: ArchConfig, slots: int, max_seq: int,
                  page_size: Optional[int] = None, kv_fp8: bool = False,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None, kv_mor: bool = False):
         page_size = page_size or min(64, max_seq)
         if max_seq % page_size:
             raise ValueError(
@@ -85,12 +105,13 @@ class PagedKVPool:
         self.max_seq = max_seq
         self.page_size = page_size
         self.kv_fp8 = kv_fp8
+        self.kv_mor = kv_mor
         self.pages_per_seq = max_seq // page_size
         self.n_pages = (slots * self.pages_per_seq if n_pages is None
                         else n_pages)
         self.trash = self.n_pages  # last physical page
 
-        specs = cache_specs(cfg, slots, max_seq, kv_fp8)
+        specs = cache_specs(cfg, slots, max_seq, kv_fp8, kv_mor)
         flat, self._treedef = jax.tree_util.tree_flatten_with_path(specs)
         self._keys = [_leaf_key(p) for p, _ in flat]
         self._paged = [_is_paged_key(k) for k in self._keys]
@@ -244,7 +265,97 @@ class PagedKVPool:
         out = [fn(k, *ls) for k, *ls in zip(self._keys, *flats)]
         return jax.tree_util.tree_unflatten(self._treedef, out)
 
+    # ------------------------------------------------- MoR cold tier --
+    def _kv_lane_indices(self):
+        """[(payload_idx, tags_idx, scale_idx)] per paged k/v group."""
+        by_key = {k: i for i, k in enumerate(self._keys)}
+        groups = []
+        for key in self._keys:
+            if key.rsplit("/", 1)[-1] not in ("k", "v"):
+                continue
+            t, s = key + "_tags", key + "_scale"
+            if t in by_key and s in by_key:
+                groups.append((by_key[key], by_key[t], by_key[s]))
+        return groups
+
+    def recompress_pages(self, pages) -> int:
+        """Sub4-recompress whole (sealed) pages in place: fp8 payload
+        bytes -> packed E2M1 nibbles + micro-scale bytes inside the
+        same payload lane, tags -> TAG_NVFP4, scales retargeted. The
+        caller guarantees the pages are fully written and behind every
+        reader's write frontier (the engine's cold-page policy); the
+        positional cur_index mask, not these lanes, decides visibility.
+        Returns the number of pages recompressed."""
+        if not self.kv_mor:
+            raise ValueError(
+                "recompress_pages needs a kv_mor pool (tags lanes)"
+            )
+        pages = [int(p) for p in pages if int(p) != self.trash]
+        if not pages:
+            return 0
+        idx = jnp.asarray(pages, jnp.int32)
+        for pi, ti, si in self._kv_lane_indices():
+            pay, tags, sc = _recompress_slab(
+                self._leaves[pi], self._leaves[ti], self._leaves[si], idx
+            )
+            self._leaves[pi] = pay
+            self._leaves[ti] = tags
+            self._leaves[si] = sc
+        return len(pages)
+
     # ----------------------------------------------------- inspection --
+    def bytes_per_token(self) -> int:
+        """Physical pool bytes moved per cache position by one gather +
+        scatter round trip, summed over paged leaves and units -- a
+        deterministic property of the cache layout (bf16 2 B/elt vs
+        MoR's 1 B payload + tag/scale lanes), so it gates at threshold
+        0 in benchmarks.compare."""
+        total = 0
+        for key, leaf in zip(self._keys, self._leaves):
+            if not _is_paged_key(key):
+                continue
+            per_pos = int(np.prod(leaf.shape[3:], dtype=np.int64))
+            total += leaf.shape[0] * per_pos * leaf.dtype.itemsize
+        return int(total)
+
+    def kv_cache_stats(self) -> Dict[str, float]:
+        """Host-side tag census over written rows of owned pages: tag
+        fractions, logical payload bytes per element, and a v2-layout
+        stats row (models.attention.kv_stats_row semantics)."""
+        from repro.models.attention import kv_bytes_per_element
+        from repro.models.attention import kv_stats_row as _row
+
+        if not self.kv_mor:
+            return {}
+        owned = sorted({p for o in self._owned for p in o})
+        if not owned:
+            return {"written": 0}
+        tags_all, written = [], 0
+        for _, ti, si in self._kv_lane_indices():
+            tags = np.asarray(self._leaves[ti][:, owned])
+            sc = np.asarray(self._leaves[si][:, owned])
+            mask = sc > 0  # written rows only (zero scale = never set)
+            tags_all.append(tags[mask])
+            written += int(mask.sum())
+        t = np.concatenate(tags_all) if tags_all else np.zeros(0, np.uint8)
+        if t.size == 0:
+            return {"written": 0}
+        frac = lambda tag: float((t == tag).mean())
+        from repro.kernels.ref import (
+            TAG_BF16, TAG_E4M3, TAG_E5M2, TAG_NVFP4,
+        )
+
+        return {
+            "written": written,
+            "frac_e4m3": frac(TAG_E4M3),
+            "frac_e5m2": frac(TAG_E5M2),
+            "frac_bf16": frac(TAG_BF16),
+            "frac_nvfp4": frac(TAG_NVFP4),
+            "frac_fp8": frac(TAG_E4M3) + frac(TAG_E5M2),
+            "payload_bpe": float(kv_bytes_per_element(t)),
+            "stats_row": np.asarray(_row(t)),
+        }
+
     def stats(self) -> Dict[str, int]:
         return {
             "n_pages": self.n_pages,

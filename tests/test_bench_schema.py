@@ -66,21 +66,34 @@ def test_legacy_bare_list_rejected():
         validate_artifact(legacy)
 
 
-def test_v1_and_v2_versions_accepted_v3_rejected():
-    """The v2 bump keeps stored v1 history validating; unknown versions
-    stay hard errors."""
-    from benchmarks.schema import SCHEMA_V1, SCHEMA_V2
+def test_known_versions_accepted_unknown_rejected():
+    """Each additive bump keeps stored history validating; unknown
+    versions stay hard errors."""
+    from benchmarks.schema import SCHEMA_V1, SCHEMA_V2, SCHEMA_V3
 
     doc = make_artifact(GOOD_CSV)
-    assert doc["schema"] == SCHEMA_V2
+    assert doc["schema"] == SCHEMA_V3
     validate_artifact(doc)
-    v1 = copy.deepcopy(doc)
-    v1["schema"] = SCHEMA_V1
-    validate_artifact(v1)
-    v3 = copy.deepcopy(doc)
-    v3["schema"] = "repro.bench_kernels/v3"
+    for old in (SCHEMA_V1, SCHEMA_V2):
+        prev = copy.deepcopy(doc)
+        prev["schema"] = old
+        validate_artifact(prev)
+    v4 = copy.deepcopy(doc)
+    v4["schema"] = "repro.bench_kernels/v4"
     with pytest.raises(ValueError, match="schema mismatch"):
-        validate_artifact(v3)
+        validate_artifact(v4)
+
+
+def test_serve_kv_cache_row_names_fit_grammar():
+    """The v3 contract's serve kv-cache + flash q_offset row ids parse."""
+    rows = [
+        "kernel/serve_kv_cache_bf16,0.0,kv_bytes_per_token=128",
+        "kernel/serve_kv_cache_mor,0.0,"
+        "kv_bytes_per_token=84;kv_bpe_milli_hot=1000;"
+        "kv_bpe_milli_cold=562",
+        "kernel/flash_qoffset_interp,431.0,S=8;T=64;max_err=2.1e-07",
+    ]
+    validate_artifact(make_artifact(rows))
 
 
 def test_gemm_nvfp4_row_names_fit_grammar():

@@ -1,0 +1,220 @@
+"""Cross-implementation flash parity with query offsets (S < T).
+
+The headline PR-7 bug: the Pallas kernel computed the causal mask from
+the kernel-local query index (``q_pos = qi * bq + iota``), which is only
+the true position when S == T. Called with a short query chunk against a
+longer cache, queries silently masked out every key between their local
+index and their true position ``T - S + i``. This suite pins all three
+implementations -- the Pallas kernel (interpret lowering), the
+backend-dispatched ``ops.flash_attention`` wrapper, and the chunked-XLA
+``models.attention.flash_attention`` -- against one dense oracle across
+causal/full, GQA groupings, and S < T with scalar and per-row offsets,
+plus a witness that the old local-index assumption diverges.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ops import flash_attention as ops_flash
+from repro.models.attention import flash_attention as xla_flash
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _dense_oracle(q, k, v, causal=True, q_offset=None):
+    """Materialized-scores attention: the ground truth every flash
+    implementation must reproduce. q (BH, S, d), k/v (BH, T, d);
+    q_offset scalar or (BH,), default T - S."""
+    q = np.asarray(q, np.float64)
+    k = np.asarray(k, np.float64)
+    v = np.asarray(v, np.float64)
+    BH, S, d = q.shape
+    T = k.shape[1]
+    off = np.broadcast_to(
+        np.asarray(T - S if q_offset is None else q_offset), (BH,)
+    )
+    s = np.einsum("bsd,btd->bst", q, k) * d**-0.5
+    if causal:
+        q_pos = off[:, None] + np.arange(S)  # (BH, S)
+        mask = np.arange(T)[None, None, :] <= q_pos[:, :, None]
+        s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bst,btd->bsd", p, v)
+
+
+def _fold(x):  # (B, L, H, dh) -> (B*H, L, dh)
+    B, L, H, dh = x.shape
+    return jnp.moveaxis(x, 2, 1).reshape(B * H, L, dh)
+
+
+# ------------------------------------------------- kernel vs dense oracle --
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("S,T", [(8, 64), (64, 64), (16, 128), (1, 96)])
+def test_kernel_chunk_against_longer_cache(causal, S, T):
+    """Default q_offset (None -> T - S): a query chunk at the end of a
+    longer key sequence. The pre-fix kernel failed every S < T case."""
+    BH, d = 4, 32
+    q = _rand((BH, S, d), seed=S + T)
+    k = _rand((BH, T, d), seed=S + T + 1)
+    v = _rand((BH, T, d), seed=S + T + 2)
+    out = flash_attention_fwd(
+        q, k, v, causal=causal, block_q=8, block_k=32, interpret=True
+    )
+    ref = _dense_oracle(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), ref, rtol=2e-2, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("q_offset", [0, 5, 40])
+def test_kernel_scalar_offset(q_offset):
+    BH, S, T, d = 2, 8, 48, 16
+    q = _rand((BH, S, d), seed=10)
+    k = _rand((BH, T, d), seed=11)
+    v = _rand((BH, T, d), seed=12)
+    out = flash_attention_fwd(
+        q, k, v, q_offset=q_offset, block_q=8, block_k=16, interpret=True
+    )
+    ref = _dense_oracle(q, k, v, q_offset=q_offset)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), ref, rtol=2e-2, atol=2e-5
+    )
+
+
+def test_kernel_per_row_offsets():
+    """(BH,) offsets: each folded row at its own position -- the serving
+    engine's mixed-length decode batches."""
+    BH, S, T, d = 6, 4, 64, 16
+    q = _rand((BH, S, d), seed=20)
+    k = _rand((BH, T, d), seed=21)
+    v = _rand((BH, T, d), seed=22)
+    off = jnp.asarray([0, 7, 13, 28, 44, 60], jnp.int32)
+    out = flash_attention_fwd(
+        q, k, v, q_offset=off, block_q=4, block_k=16, interpret=True
+    )
+    ref = _dense_oracle(q, k, v, q_offset=np.asarray(off))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), ref, rtol=2e-2, atol=2e-5
+    )
+
+
+def test_pure_jnp_ref_matches_oracle():
+    """ref.flash_attention_ref (the backend='xla' lowering) honors the
+    same q_offset contract as the kernel."""
+    BH, S, T, d = 3, 8, 40, 16
+    q = _rand((BH, S, d), seed=30)
+    k = _rand((BH, T, d), seed=31)
+    v = _rand((BH, T, d), seed=32)
+    for off in (None, 3, jnp.asarray([0, 10, 30], jnp.int32)):
+        got = kref.flash_attention_ref(q, k, v, True, q_offset=off)
+        want = _dense_oracle(
+            q, k, v, q_offset=None if off is None else np.asarray(off)
+        )
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), want, rtol=2e-2, atol=2e-5
+        )
+
+
+# ------------------------------------------------------ witness (old bug) --
+def test_local_index_mask_assumption_diverges():
+    """Witness for the headline bug: masking by the kernel-local query
+    index (equivalent to q_offset=0) is NOT the aligned-chunk answer --
+    with S < T it hides the (T - S)-key prefix band from every query."""
+    BH, S, T, d = 2, 8, 64, 16
+    q = _rand((BH, S, d), seed=40)
+    k = _rand((BH, T, d), seed=41)
+    v = _rand((BH, T, d), seed=42)
+    old = flash_attention_fwd(  # the pre-fix mask, reproduced exactly
+        q, k, v, q_offset=0, block_q=8, block_k=16, interpret=True
+    )
+    ref = _dense_oracle(q, k, v)  # true alignment: last q at last k
+    assert float(np.max(np.abs(np.asarray(old, np.float32) - ref))) > 0.1
+
+
+# -------------------------------------------- wrapper GQA contract + dims --
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("backend", ["interpret", "xla"])
+def test_ops_wrapper_gqa_matches_model_attention(Hq, Hkv, backend):
+    """ops.flash_attention's documented 4-D GQA contract: (B,S,Hq,dh)
+    against (B,T,Hkv,dh), kv heads folded/repeated by the wrapper."""
+    B, S, dh = 2, 64, 16
+    q = _rand((B, S, Hq, dh), seed=Hq)
+    k = _rand((B, S, Hkv, dh), seed=Hq + 1)
+    v = _rand((B, S, Hkv, dh), seed=Hq + 2)
+    out = ops_flash(q, k, v, block_q=32, block_k=32, backend=backend)
+    want = xla_flash(q, k, v, kind="causal", q_chunk=32, k_chunk=32)
+    assert out.shape == (B, S, Hq, dh)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-5,
+    )
+
+
+@pytest.mark.parametrize("backend", ["interpret", "xla"])
+def test_ops_wrapper_gqa_short_chunk_per_batch_offset(backend):
+    """4-D GQA with S < T and per-batch (B,) offsets: the wrapper
+    repeats the offset across q heads before folding."""
+    B, S, T, Hq, Hkv, dh = 2, 4, 32, 4, 2, 16
+    q = _rand((B, S, Hq, dh), seed=50)
+    k = _rand((B, T, Hkv, dh), seed=51)
+    v = _rand((B, T, Hkv, dh), seed=52)
+    off = jnp.asarray([5, 20], jnp.int32)
+    out = ops_flash(
+        q, k, v, q_offset=off, block_q=4, block_k=16, backend=backend
+    )
+    G = Hq // Hkv
+    qf = _fold(q)
+    kf = _fold(jnp.repeat(k, G, axis=2))
+    vf = _fold(jnp.repeat(v, G, axis=2))
+    ref = _dense_oracle(
+        qf, kf, vf, q_offset=np.repeat(np.asarray(off), Hq)
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32).transpose(0, 2, 1, 3).reshape(
+            B * Hq, S, dh
+        ),
+        ref, rtol=2e-2, atol=2e-5,
+    )
+
+
+# --------------------------------------- ragged extents + input validation --
+def test_ragged_extents_shrink_blocks():
+    """Non-power-of-two S/T no longer trip an assert: the launcher
+    shrinks block_q/block_k to the largest dividing block."""
+    BH, S, T, d = 2, 6, 30, 16
+    q = _rand((BH, S, d), seed=60)
+    k = _rand((BH, T, d), seed=61)
+    v = _rand((BH, T, d), seed=62)
+    out = flash_attention_fwd(
+        q, k, v, block_q=512, block_k=512, interpret=True
+    )
+    ref = _dense_oracle(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), ref, rtol=2e-2, atol=2e-5
+    )
+
+
+def test_launcher_rejects_bad_inputs():
+    q = _rand((2, 8, 16), seed=70)
+    k = _rand((2, 16, 16), seed=71)
+    with pytest.raises(ValueError, match="folded"):
+        flash_attention_fwd(q[0], k, k, interpret=True)
+    with pytest.raises(ValueError, match="match"):
+        flash_attention_fwd(q, k, k[:1], interpret=True)
+    with pytest.raises(ValueError, match="positive"):
+        flash_attention_fwd(q, k, k, block_q=0, interpret=True)
+    with pytest.raises(ValueError, match="q_offset"):
+        flash_attention_fwd(
+            q, k, k, q_offset=jnp.zeros(3, jnp.int32), interpret=True
+        )
+    with pytest.raises(ValueError, match="GQA"):
+        ops_flash(
+            _rand((2, 8, 3, 16), seed=72), _rand((2, 8, 2, 16), seed=73),
+            _rand((2, 8, 2, 16), seed=74), backend="interpret",
+        )

@@ -1,0 +1,326 @@
+"""MoR KV-cache tier: per-block tag-select quantization, cold-page sub4
+recompression, score-space scale folding, and the paged pool's packed
+lanes (docs/numerics.md, docs/serving.md)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import TENSOR_MOR
+from repro.core.mor import STATS_WIDTH
+from repro.kernels.ref import TAG_BF16, TAG_E4M3, TAG_E5M2, TAG_NVFP4
+from repro.models import init_cache, init_params, make_decode_fn, make_tokens
+from repro.models.attention import (
+    _mor_kv_values,
+    decode_attention,
+    kv_bytes_per_element,
+    kv_stats_row,
+    quantize_kv_mor,
+    recompress_kv_nvfp4,
+)
+from repro.serve import PagedKVPool
+
+
+def _rand(shape, seed=0, scale=1.0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+def _dequant(payload, tags, scales):
+    vals = _mor_kv_values(payload, tags)
+    ss = jnp.where(scales > 0, scales, 1.0)
+    return np.asarray(vals / ss[..., None], np.float32)
+
+
+# ------------------------------------------------------ hot-tier quantize --
+def test_quantize_kv_mor_roundtrip():
+    x = _rand((2, 16, 4, 16), seed=0, scale=3.0)
+    payload, tags, scales = quantize_kv_mor(x)
+    assert payload.dtype == jnp.uint8 and payload.shape == x.shape
+    assert tags.shape == scales.shape == x.shape[:-1]
+    # Hot storage mixture is the two fp8 arms only (bytes stay bounded).
+    assert set(np.unique(np.asarray(tags))) <= {TAG_E4M3, TAG_E5M2}
+    assert np.all(np.asarray(scales) > 0)  # zero scale = empty marker
+    deq = _dequant(payload, tags, scales)
+    xf = np.asarray(x, np.float32)
+    rel = np.abs(deq - xf) / (np.abs(xf) + 1e-3)
+    assert np.median(rel) < 0.04
+
+
+def test_quantize_kv_mor_outlier_rows_pick_e5m2():
+    """A block with a huge dynamic range overwhelms E4M3's exponent
+    span; the Eq. 3 comparison must route it to the E5M2 arm."""
+    rng = np.random.default_rng(3)
+    x = np.full((1, 4, 1, 16), 1e-4, np.float32)
+    x[..., 0] = 3e4  # ~8 binades above the rest
+    x *= rng.choice([-1.0, 1.0], x.shape)
+    _, tags, _ = quantize_kv_mor(jnp.asarray(x))
+    assert np.all(np.asarray(tags) == TAG_E5M2)
+    xg = _rand((1, 8, 2, 16), seed=4)  # plain Gaussian rows: E4M3 wins
+    _, tg, _ = quantize_kv_mor(xg)
+    assert np.all(np.asarray(tg) == TAG_E4M3)
+
+
+def test_quantize_kv_mor_stats_row():
+    x = _rand((1, 8, 2, 16), seed=5)
+    *_, row = quantize_kv_mor(x, with_stats=True)
+    row = np.asarray(row)
+    assert row.shape == (STATS_WIDTH,)
+    assert row[0] == 1.0 and row[6] == 16  # decision, block count
+    assert abs(row[3] + row[4] + row[5] - 1.0) < 1e-6
+
+
+# ----------------------------------------------------- cold-tier sub4 --
+def test_recompress_kv_nvfp4_roundtrip():
+    x = _rand((2, 8, 2, 16), seed=6, scale=2.0)
+    hot = quantize_kv_mor(x)
+    payload, tags, scales = recompress_kv_nvfp4(*hot)
+    assert np.all(np.asarray(tags) == TAG_NVFP4)
+    assert np.all(np.asarray(scales) > 0)
+    # Bytes beyond nibbles + micro scales stay zero (dh/2 + dh/16).
+    dh = x.shape[-1]
+    used = dh // 2 + dh // 16
+    assert np.all(np.asarray(payload)[..., used:] == 0)
+    deq = _dequant(payload, tags, scales)
+    xf = np.asarray(x, np.float32)
+    rel = np.abs(deq - xf) / (np.abs(xf) + 1e-2)
+    assert np.median(rel) < 0.25  # 4-bit storage: coarse but bounded
+    assert np.all(np.isfinite(deq))
+
+
+def test_recompress_rejects_unaligned_head_dim():
+    x = _rand((1, 4, 1, 8), seed=7)
+    payload, tags, scales = quantize_kv_mor(x)
+    with pytest.raises(ValueError, match="divisible"):
+        recompress_kv_nvfp4(payload, tags, scales)
+
+
+def test_kv_bytes_per_element_by_tag():
+    mk = lambda tag: jnp.full((4,), tag, jnp.uint8)
+    assert float(kv_bytes_per_element(mk(TAG_E4M3))) == 1.0
+    assert float(kv_bytes_per_element(mk(TAG_E5M2))) == 1.0
+    assert float(kv_bytes_per_element(mk(TAG_BF16))) == 2.0
+    assert abs(float(kv_bytes_per_element(mk(TAG_NVFP4))) - 0.5625) < 1e-6
+    mixed = jnp.asarray([TAG_E4M3, TAG_NVFP4], jnp.uint8)
+    assert abs(float(kv_bytes_per_element(mixed)) - 0.78125) < 1e-6
+    row = np.asarray(kv_stats_row(mixed))
+    assert row[3] == 0.5 and row[8] == 0.5 and row[6] == 2
+
+
+# ------------------------------------------------------- decode parity --
+def test_decode_attention_mor_matches_bf16():
+    rng = np.random.default_rng(1)
+    B, T, Hq, Hkv, dh = 2, 32, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    cur = jnp.asarray(T - 1, jnp.int32)
+
+    ref = decode_attention(q, k, v, cur)
+    kp, kt, ks = quantize_kv_mor(k)
+    vp, vt, vs = quantize_kv_mor(v)
+    out = decode_attention(
+        q, kp, vp, cur, k_scale=ks, v_scale=vs, k_tags=kt, v_tags=vt
+    )
+    # Same tolerance as the fp8 cache suite: the hot tier stores fp8.
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=0.1, atol=0.05,
+    )
+
+
+def test_decode_attention_mor_per_row_positions():
+    rng = np.random.default_rng(2)
+    B, T, Hq, Hkv, dh = 3, 24, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    cur = jnp.asarray([5, 13, 23], jnp.int32)
+
+    ref = decode_attention(q, k, v, cur)
+    kp, kt, ks = quantize_kv_mor(k)
+    vp, vt, vs = quantize_kv_mor(v)
+    out = decode_attention(
+        q, kp, vp, cur, k_scale=ks, v_scale=vs, k_tags=kt, v_tags=vt
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=0.1, atol=0.05,
+    )
+
+
+def test_decode_attention_cold_pages_stay_usable():
+    """Sub4-recompressed (cold) cache blocks decode through the same
+    tag-select path; accuracy degrades gracefully, never to garbage."""
+    rng = np.random.default_rng(8)
+    B, T, Hq, Hkv, dh = 2, 32, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    cur = jnp.asarray(T - 1, jnp.int32)
+
+    ref = np.asarray(decode_attention(q, k, v, cur), np.float32)
+    kp, kt, ks = recompress_kv_nvfp4(*quantize_kv_mor(k))
+    vp, vt, vs = recompress_kv_nvfp4(*quantize_kv_mor(v))
+    out = np.asarray(
+        decode_attention(
+            q, kp, vp, cur, k_scale=ks, v_scale=vs, k_tags=kt, v_tags=vt
+        ),
+        np.float32,
+    )
+    assert np.all(np.isfinite(out))
+    assert float(np.max(np.abs(out - ref))) < 0.5  # 4-bit, looser
+
+
+# -------------------------------------------- trash-page poison hygiene --
+def _poison_beyond(arr, cur, value):
+    """Overwrite cache positions past ``cur`` (garbage by contract)."""
+    a = np.asarray(arr).copy()
+    a[:, cur + 1:] = value
+    return jnp.asarray(a)
+
+
+def test_decode_mor_trash_rows_cannot_poison_output():
+    """Regression for the NaN/denormal hazard: payload bytes that
+    bitcast to fp8 NaN plus NaN/zero/denormal scales in rows beyond
+    ``cur`` (trash-page reads, stale pages) must not perturb the
+    output. A masked probability is 0, but 0 * NaN = NaN -- the divide
+    must fold inside the mask and garbage value rows must be zeroed."""
+    rng = np.random.default_rng(9)
+    B, T, Hq, Hkv, dh = 2, 16, 4, 2, 16
+    cur_i = 9
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    cur = jnp.asarray(cur_i, jnp.int32)
+
+    kp, kt, ks = quantize_kv_mor(k)
+    vp, vt, vs = quantize_kv_mor(v)
+    clean = np.asarray(
+        decode_attention(
+            q, kp, vp, cur, k_scale=ks, v_scale=vs, k_tags=kt, v_tags=vt
+        ),
+        np.float32,
+    )
+    # 0x7F bitcasts to E4M3 NaN; tag 3 routes through the NVFP4 decode
+    # whose micro-scale bytes are then NaN too.
+    kp2 = _poison_beyond(kp, cur_i, 0x7F)
+    vp2 = _poison_beyond(vp, cur_i, 0x7F)
+    kt2 = _poison_beyond(kt, cur_i, TAG_NVFP4)
+    vt2 = _poison_beyond(vt, cur_i, TAG_NVFP4)
+    for bad_scale in (np.nan, 0.0, 1e-42, np.inf):
+        ks2 = _poison_beyond(ks, cur_i, bad_scale)
+        vs2 = _poison_beyond(vs, cur_i, bad_scale)
+        out = np.asarray(
+            decode_attention(
+                q, kp2, vp2, cur, k_scale=ks2, v_scale=vs2,
+                k_tags=kt2, v_tags=vt2,
+            ),
+            np.float32,
+        )
+        assert np.all(np.isfinite(out)), bad_scale
+        np.testing.assert_array_equal(out, clean)
+
+
+def test_decode_fp8_trash_rows_cannot_poison_output():
+    """Same hazard on the plain fp8 cache path (no tags)."""
+    rng = np.random.default_rng(10)
+    from repro.models.attention import quantize_kv
+
+    B, T, Hq, Hkv, dh = 2, 16, 4, 2, 16
+    cur_i = 6
+    q = jnp.asarray(rng.standard_normal((B, 1, Hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hkv, dh)), jnp.float32)
+    cur = jnp.asarray(cur_i, jnp.int32)
+    kp, ks = quantize_kv(k)
+    vp, vs = quantize_kv(v)
+    clean = np.asarray(
+        decode_attention(q, kp, vp, cur, k_scale=ks, v_scale=vs),
+        np.float32,
+    )
+    kp2 = _poison_beyond(np.asarray(kp, np.float32), cur_i,
+                         np.nan).astype(kp.dtype)
+    vp2 = _poison_beyond(np.asarray(vp, np.float32), cur_i,
+                         np.nan).astype(vp.dtype)
+    ks2 = _poison_beyond(ks, cur_i, np.nan)
+    vs2 = _poison_beyond(vs, cur_i, 0.0)
+    out = np.asarray(
+        decode_attention(q, kp2, vp2, cur, k_scale=ks2, v_scale=vs2),
+        np.float32,
+    )
+    assert np.all(np.isfinite(out))
+    np.testing.assert_array_equal(out, clean)
+
+
+# ------------------------------------------------ model + pool plumbing --
+def test_decode_step_with_mor_cache():
+    cfg = dataclasses.replace(reduced(get_config("llama3-8b")), vocab=128)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = make_tokens(cfg)
+    decode = jax.jit(make_decode_fn(cfg, TENSOR_MOR))
+
+    cache_m = init_cache(cfg, 2, 32, kv_mor=True)
+    cache16 = init_cache(cfg, 2, 32)
+    tok = jnp.asarray([[3], [5]], jnp.int32)
+    cur = jnp.asarray(4, jnp.int32)
+
+    lm, cm, _ = decode(params, tokens, cache_m, tok, cur)
+    l16, _, _ = decode(params, tokens, cache16, tok, cur)
+    assert np.all(np.isfinite(np.asarray(lm, np.float32)))
+    a = jax.nn.softmax(np.asarray(lm[..., : cfg.vocab], np.float32))
+    b = jax.nn.softmax(np.asarray(l16[..., : cfg.vocab], np.float32))
+    assert float(np.max(np.abs(a - b))) < 0.05
+    assert cm["dense"]["k"].dtype == jnp.uint8
+    assert cm["dense"]["k_tags"].dtype == jnp.uint8
+    assert cm["dense"]["k_scale"].dtype == jnp.float32
+
+
+def test_init_cache_rejects_fp8_plus_mor():
+    cfg = dataclasses.replace(reduced(get_config("llama3-8b")), vocab=128)
+    with pytest.raises(ValueError):
+        init_cache(cfg, 1, 16, kv_fp8=True, kv_mor=True)
+
+
+def test_pool_mor_lanes_and_bytes_per_token():
+    cfg = reduced(get_config("gemma-2b"))
+    mk = lambda **kw: PagedKVPool(cfg, slots=2, max_seq=32, page_size=8,
+                                  **kw)
+    bf16, fp8, mor = mk(), mk(kv_fp8=True), mk(kv_mor=True)
+    # Physical gather/scatter bytes per position: MoR's u8 payload +
+    # tag/scale lanes beat bf16; fp8 (no tag lane) is smallest.
+    assert mor.bytes_per_token() < bf16.bytes_per_token()
+    assert fp8.bytes_per_token() <= mor.bytes_per_token()
+    with pytest.raises(ValueError, match="kv_mor"):
+        bf16.recompress_pages([0])
+    assert mor.recompress_pages([mor.trash]) == 0  # trash filtered
+
+
+def test_pool_recompress_pages_in_place():
+    cfg = reduced(get_config("gemma-2b"))
+    pool = PagedKVPool(cfg, slots=1, max_seq=32, page_size=8, kv_mor=True)
+    assert pool.alloc(0, 16)  # pages 0..1
+    # Write one page worth of quantized rows into every k/v lane group.
+    x = _rand((1, 8, cfg.n_kv, cfg.head_dim), seed=11)
+    pay, tags, sc = quantize_kv_mor(x)
+    for pi, ti, si in pool._kv_lane_indices():
+        n_units = pool._leaves[pi].shape[0]
+        pool._leaves[pi] = pool._leaves[pi].at[:, 0].set(
+            jnp.broadcast_to(pay, (n_units, *pay.shape[1:])))
+        pool._leaves[ti] = pool._leaves[ti].at[:, 0].set(
+            jnp.broadcast_to(tags, (n_units, *tags.shape[1:])))
+        pool._leaves[si] = pool._leaves[si].at[:, 0].set(
+            jnp.broadcast_to(sc, (n_units, *sc.shape[1:])))
+    st = pool.kv_cache_stats()
+    assert st["written"] > 0 and st["frac_fp8"] == 1.0
+    assert abs(st["payload_bpe"] - 1.0) < 1e-6
+    assert pool.recompress_pages([0]) == 1
+    st2 = pool.kv_cache_stats()
+    assert st2["frac_nvfp4"] > 0 and st2["frac_fp8"] < 1.0
+    assert st2["payload_bpe"] < 1.0
+    # Page 1 was never recompressed: its tags lane is untouched.
+    for _, ti, _ in pool._kv_lane_indices():
+        assert np.all(np.asarray(pool._leaves[ti][:, 1]) != TAG_NVFP4)

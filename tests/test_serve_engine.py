@@ -159,10 +159,16 @@ def test_shared_cur_index_decode_diverges(dense_model):
         "shared-max cur_index reproduced the per-slot logits; the "
         "witness lost its teeth"
     )
-    # The long slot sits AT the shared position, so it agrees.
+    # The long slot sits AT the shared position, so it agrees -- up to
+    # cross-trace compilation noise: the two decode calls jit-compile
+    # different programs (vector vs scalar cur_index), and XLA's float
+    # reassociation between them varies with the process hash seed
+    # (observed up to ~2e-3 across PYTHONHASHSEED values). 5e-3 clears
+    # that noise while staying ~4x below the short slot's real
+    # divergence (~2e-2).
     np.testing.assert_allclose(
         np.asarray(lg_vec[1, 0, : cfg.vocab]),
-        np.asarray(lg_old[1, 0, : cfg.vocab]), atol=1e-3,
+        np.asarray(lg_old[1, 0, : cfg.vocab]), atol=5e-3,
     )
 
 
@@ -328,6 +334,74 @@ def test_kv_fp8_paged_engine_smoke(dense_model):
     for r in reqs:
         assert r.done and len(r.out) == 4
         assert all(0 <= t < cfg.vocab for t in r.out)
+
+
+def _run_engine(cfg, params, prompts, n_tok, **scfg_kw):
+    kw = dict(slots=2, max_seq=64, page_size=8, prefill_chunk=8)
+    kw.update(scfg_kw)
+    eng = Engine(cfg, TENSOR_MOR, params, ServeConfig(**kw))
+    reqs = [Request(i, p, max_tokens=n_tok) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    for r in reqs:
+        assert r.done and r.error is None, (r.rid, r.error)
+    return [r.out for r in reqs], eng
+
+
+def test_kv_mor_paged_engine_matches_bf16_engine(dense_model):
+    """Decode served from MoR-packed KV pages (uint8 payload + tag +
+    scale lanes, gather/scatter moving packed bytes) is token-for-token
+    against the bf16-cache engine on staggered mixed-length traffic."""
+    cfg, params = dense_model
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, L).astype(np.int32)
+               for L in (3, 17, 9, 26)]
+    ref, eng_b = _run_engine(cfg, params, prompts, 6)
+    out, eng_m = _run_engine(cfg, params, prompts, 6, kv_mor=True)
+    assert out == ref
+    # The MoR pool's per-position gather/scatter bytes beat bf16's.
+    assert eng_m.pool.bytes_per_token() < eng_b.pool.bytes_per_token()
+    assert eng_m.pool.free_pages() == eng_b.pool.free_pages()
+
+
+def test_kv_mor_cold_sealing_recompresses_and_stays_exact(dense_model):
+    """With the cold-page policy on, pages behind the write frontier
+    are sub4-recompressed mid-stream (visible as NVFP4 tags in the
+    cache census) and generation still matches the bf16 engine."""
+    cfg, params = dense_model
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, cfg.vocab, 10).astype(np.int32)
+    ref, _ = _run_engine(cfg, params, [prompt], 24, slots=1)
+
+    eng = Engine(cfg, TENSOR_MOR, params,
+                 ServeConfig(slots=1, max_seq=64, page_size=8,
+                             prefill_chunk=8, kv_mor=True, kv_mor_cold=2))
+    r = Request(0, prompt, max_tokens=24)
+    eng.submit(r)
+    saw_cold = 0.0
+    steps = 0
+    while eng.step() and steps < 200:
+        steps += 1
+        st = eng.kv_cache_stats()
+        if st.get("written"):
+            saw_cold = max(saw_cold, st["frac_nvfp4"])
+    assert r.done and r.out == ref[0]
+    assert saw_cold > 0.5, "cold sealing never recompressed a page"
+    assert not eng._sealed  # cleared when the slot finished
+    assert eng.pool.free_pages() == eng.pool.n_pages
+
+
+def test_kv_mor_config_validation(dense_model):
+    cfg, params = dense_model
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        Engine(cfg, TENSOR_MOR, params,
+               ServeConfig(slots=1, max_seq=32, page_size=8,
+                           kv_fp8=True, kv_mor=True))
+    with pytest.raises(ValueError, match="kv_mor_cold"):
+        Engine(cfg, TENSOR_MOR, params,
+               ServeConfig(slots=1, max_seq=32, page_size=8,
+                           kv_mor_cold=4))
 
 
 # ------------------------------------------- recurrent-state fallback --

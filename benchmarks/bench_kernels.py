@@ -4,8 +4,8 @@ Pallas kernels) + derived bandwidth.
 
 ``--smoke`` runs a reduced matrix (CI lane); ``--json PATH`` writes the
 rows as a machine-readable artifact conforming to the frozen
-``repro.bench_kernels/v1`` schema (``benchmarks/schema.py``,
-documented in ``benchmarks/README.md``).
+``repro.bench_kernels`` schema (``benchmarks/schema.py``, documented
+in ``benchmarks/README.md``).
 
 The sharded lane (``kernel/*_sharded_*`` rows) needs >= 4 devices;
 on a single-device host it respawns itself in a subprocess with 4
@@ -456,6 +456,82 @@ def _bench_gemm_decode_reuse(rows, rng, smoke: bool):
     ))
 
 
+def _bench_optim_state(rows, rng, smoke: bool):
+    """Compressed training-state lane (the rows the v4 schema names).
+
+    * ``kernel/grad_compress_<mode>_*`` -- one jitted gradient
+      compression event per mode (flat per-tensor E4M3 vs per-block
+      MoR, with and without error feedback) on the same wide-range
+      leaf, with the payload bytes/element the tag mixture implies.
+    * ``kernel/optim_moments_<tier>_*`` -- encode+decode round-trip of
+      an Adam moment leaf, carrying the HBM budget counter
+      ``moment_bytes_per_param_milli``: physical bytes/param of the
+      compacted pack in milli-bytes. Deterministic for the fixed-seed
+      data (a fully-fp8 leaf prices ~1000, the NVFP4-friendly sub4
+      leaf ~563), so compare.py gates it at threshold 0 -- a lane that
+      silently re-inflates the moment store fails the bench diff.
+
+    Moment leaves stay at 1024x1024 even under --smoke: the per-block
+    metadata only amortizes below the budget at full leaf size, and
+    the counter must not depend on the smoke flag.
+    """
+    from repro.core import EVENT_MOMENT_M, EVENT_MOMENT_V
+    from repro.optim.compress import compress_grads, ef_init
+    from repro.optim.moments import (
+        decode_moment,
+        encode_moment,
+        physical_bytes_per_param,
+    )
+
+    iters = 3 if smoke else 10
+    n = 512 if smoke else 1024
+    pol = MoRPolicy(recipe="sub3", backend="xla")
+    g = {"w": jnp.asarray(
+        rng.standard_normal((n, n)) * np.exp2(
+            rng.integers(-8, 8, (n, n))),
+        jnp.float32,
+    )}
+    ef0 = ef_init(g)
+    for mode in ("fp8", "mor", "mor_ef"):
+        ef = ef0 if mode == "mor_ef" else None
+
+        def event(gg, ee, mode=mode):
+            return compress_grads(gg, mode, ee, policy=pol)
+
+        f = jax.jit(event)
+        us = _time(f, g, ef, iters=iters)
+        _, _, stats = f(g, ef)
+        bpe = 1.0 if stats is None else float(stats["w"][11])
+        rows.append(csv_row(
+            f"kernel/grad_compress_{mode}_{n}x{n}", us,
+            f"payload_bpe={bpe:.3f};"
+            f"ef={int(mode.endswith('_ef'))}",
+        ))
+
+    tiers = (
+        ("fp8", EVENT_MOMENT_M,
+         jnp.ones((1024, 1024), jnp.float32)),
+        ("sub4", EVENT_MOMENT_V,
+         _nvfp4_friendly(rng, (1024, 1024)).astype(jnp.float32)),
+    )
+    for tier, kind, leaf in tiers:
+        tpol = MoRPolicy(recipe="sub4" if tier == "sub4" else "sub3",
+                         backend="xla")
+        pm = encode_moment(leaf, tpol, kind=kind)
+        milli = int(round(physical_bytes_per_param(pm) * 1000))
+
+        def roundtrip(a, tpol=tpol, kind=kind):
+            return decode_moment(encode_moment(a, tpol, kind=kind))
+
+        us = _time(jax.jit(roundtrip), leaf, iters=iters)
+        rows.append(csv_row(
+            f"kernel/optim_moments_{tier}_1024x1024", us,
+            f"moment_bytes_per_param_milli={milli};"
+            f"payload_bpe={float(pm.stats[11]):.3f};"
+            f"frac_nvfp4={float(pm.stats[8]):.2f}",
+        ))
+
+
 def _sharded_rows(smoke: bool):
     """Multi-device lane (>= 4 devices): the sharded mixed GEMM and the
     allreduced-stats quantization under shard_map vs their replicated
@@ -606,6 +682,12 @@ def main(smoke: bool = False, sharded: bool = True,
     _bench_quantize_pack(rows, rng, smoke)
     _bench_gemm_decode_reuse(rows, rng, smoke)
 
+    # Compressed training state: gradient-compression events and the
+    # packed Adam-moment round-trip with its HBM budget counter (the
+    # kernel/grad_compress_* + kernel/optim_moments_* rows the v4
+    # schema contract names).
+    _bench_optim_state(rows, rng, smoke)
+
     # Fused mor_quantize (the XLA lowering used in train steps).
     quant_sizes = ((1024, 1024),) if smoke else ((1024, 1024), (4096, 1024))
     for mkn in quant_sizes:
@@ -707,7 +789,7 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="reduced matrix for the CI bench lane")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write rows as a repro.bench_kernels/v1 artifact")
+                    help="write rows as a repro.bench_kernels artifact")
     ap.add_argument("--no-sharded", action="store_true",
                     help="skip the multi-device sharded lane")
     ap.add_argument("--sharded-child", action="store_true",

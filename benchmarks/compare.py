@@ -63,6 +63,12 @@ COUNTER_KEYS = (
     "kv_bytes_per_token",
     "kv_bpe_milli_hot",
     "kv_bpe_milli_cold",
+    # Compressed training state: physical HBM bytes/param of the
+    # packed Adam moment in milli-bytes (fully-fp8 leaf = 1000, the
+    # NVFP4-friendly sub4 leaf = ~563). A deterministic property of
+    # the pack layout for the lane's fixed-seed data, so any growth
+    # means the moment store re-inflated.
+    "moment_bytes_per_param_milli",
 )
 
 # Name fragments of lanes whose wall clock is interpreter- or

@@ -7,11 +7,11 @@ slow lane runs ``python -m benchmarks.schema bench_kernels.json`` after
 the bench smoke, so a drifting producer fails the build instead of
 silently breaking downstream consumers.
 
-Schema ``repro.bench_kernels/v3`` (current; the validator also accepts
-``v1``/``v2`` artifacts so stored history keeps validating)::
+Schema ``repro.bench_kernels/v4`` (current; the validator also accepts
+``v1``/``v2``/``v3`` artifacts so stored history keeps validating)::
 
     {
-      "schema": "repro.bench_kernels/v3",
+      "schema": "repro.bench_kernels/v4",
       "rows": [
         {"name": "kernel/<lane>_<variant>[_<size>]",   # row id
          "us":   12.3,                                  # mean wall us/call
@@ -26,7 +26,14 @@ and the version string bumps. v3 is additive the same way: when the
 serving lane runs, producers must emit the ``kernel/serve_kv_cache_*``
 rows (per-mode KV-cache bytes-per-token counters: bf16 / kv_fp8 /
 kv_mor) and a ``kernel/flash_qoffset_*`` row (the query-offset flash
-parity lane). Row grammar is unchanged across all versions:
+parity lane). v4 (additive again): when the default lane matrix runs,
+producers must emit the compressed training-state rows --
+``kernel/grad_compress_<mode>_*`` (per-mode gradient-compression
+events) and ``kernel/optim_moments_<tier>_*`` rows whose ``derived``
+carries the ``moment_bytes_per_param_milli`` HBM budget counter
+(physical bytes/param of the packed Adam moment, in milli-bytes;
+compare.py gates it at threshold 0). Row grammar is unchanged across
+all versions:
 
 * ``name`` matches ``^kernel/[A-Za-z0-9._-]+$`` and is unique per
   artifact.
@@ -49,12 +56,14 @@ from typing import Any, Dict, List
 SCHEMA_V1 = "repro.bench_kernels/v1"
 SCHEMA_V2 = "repro.bench_kernels/v2"
 SCHEMA_V3 = "repro.bench_kernels/v3"
-SCHEMA = SCHEMA_V3
-ACCEPTED_SCHEMAS = (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3)
+SCHEMA_V4 = "repro.bench_kernels/v4"
+SCHEMA = SCHEMA_V4
+ACCEPTED_SCHEMAS = (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4)
 _NAME_RE = re.compile(r"^kernel/[A-Za-z0-9._-]+$")
 
 __all__ = [
-    "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "SCHEMA_V3", "ACCEPTED_SCHEMAS",
+    "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "SCHEMA_V3", "SCHEMA_V4",
+    "ACCEPTED_SCHEMAS",
     "make_artifact", "validate_artifact", "rows_from_csv",
 ]
 
@@ -75,7 +84,7 @@ def make_artifact(csv_rows: List[str]) -> Dict[str, Any]:
 
 def validate_artifact(doc: Any) -> None:
     """Raise ValueError unless ``doc`` conforms to an accepted schema
-    version (v1/v2/v3 -- the row grammar is shared)."""
+    version (v1..v4 -- the row grammar is shared)."""
     if not isinstance(doc, dict):
         raise ValueError(f"artifact must be an object, got {type(doc)}")
     extra = set(doc) - {"schema", "rows"}

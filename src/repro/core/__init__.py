@@ -18,6 +18,10 @@ from .metrics import (
     relative_error,
 )
 from .mor import (
+    EVENT_GEMM,
+    EVENT_GRAD,
+    EVENT_MOMENT_M,
+    EVENT_MOMENT_V,
     STATS_WIDTH,
     mor_quantize,
     partition_of,
@@ -55,6 +59,7 @@ __all__ = [
     "block_dynamic_range_ok", "block_relative_error_sums", "relative_error",
     "STATS_WIDTH", "mor_quantize", "partition_of", "quant_dequant",
     "quantize_for_gemm",
+    "EVENT_GEMM", "EVENT_GRAD", "EVENT_MOMENT_M", "EVENT_MOMENT_V",
     "PER_BLOCK_64", "PER_BLOCK_128", "PER_CHANNEL", "PER_TENSOR",
     "SUB_CHANNEL_128", "Partition", "block_amax",
     "BF16_BASELINE", "SUBTENSOR2_MOR", "SUBTENSOR3_MOR", "SUBTENSOR4_MOR",

@@ -19,7 +19,10 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-__all__ = ["psum_over", "pmax_over", "global_size", "compat_shard_map"]
+__all__ = [
+    "psum_over", "pmax_over", "global_size", "all_gather_over",
+    "compat_shard_map",
+]
 
 
 def compat_shard_map(f, mesh, in_specs, out_specs):
@@ -47,6 +50,16 @@ def psum_over(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
 def pmax_over(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
     """lax.pmax over ``axes`` when non-empty, identity otherwise."""
     return jax.lax.pmax(x, tuple(axes)) if axes else x
+
+
+def all_gather_over(x: jnp.ndarray, axis: str | None) -> jnp.ndarray:
+    """lax.all_gather over ``axis`` when named, else the degenerate
+    single-participant stack ``x[None]`` -- so a collective body (e.g.
+    the MoR-payload pod psum in :mod:`repro.optim.compress`) lowers
+    unchanged on a single-pod mesh or entirely outside shard_map."""
+    if axis is None:
+        return x[None]
+    return jax.lax.all_gather(x, axis)
 
 
 def global_size(local_size: int, axes: Sequence[str]) -> jnp.ndarray:

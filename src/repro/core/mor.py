@@ -21,7 +21,7 @@ points) the group amax behind the Alg. 1 mantissa -- are allreduced
 over the named axes, so per-block decisions are bit-identical to the
 single-device run. See docs/sharding.md.
 
-Stats vector layout v2 (f32, STATS_WIDTH = 10):
+Stats vector layout v3 (f32, STATS_WIDTH = 12):
   [0] decision        1.0 if the preferred low-precision type was accepted
                       (tensor-level), the fraction of blocks in the
                       recipe's preferred format (sub-*: E4M3 for
@@ -40,9 +40,26 @@ Stats vector layout v2 (f32, STATS_WIDTH = 10):
   [9] micro_scale_bpe extra bytes/element spent on NVFP4 micro scales
                       over the whole operand (= frac_nvfp4 / 16: one
                       E4M3 byte per 16 elements of each NVFP4 block).
+  [10] event_kind     which pipeline stage emitted the row: 0.0 = GEMM
+                      operand event (mor_dot fwd/bwd), 1.0 = gradient
+                      compression (optim.compress), 2.0 = Adam first
+                      moment, 3.0 = Adam second moment (optim.moments).
+                      Producers in this module always emit 0.0; the
+                      optimizer layer stamps its kind so consumers can
+                      split GEMM rows from optimizer-event rows.
+  [11] payload_bpe    logical payload bytes/element implied by the tag
+                      mixture, micro scales included: 1*frac_e4m3 +
+                      1*frac_e5m2 + 2*frac_bf16 + 0.5625*frac_nvfp4.
+                      Excludes the per-block tag/scale grids (8 bytes
+                      per block; see optim.moments.block_overhead_bpe).
+                      A fully-fp8 selection reads 1.0, fully-NVFP4
+                      0.5625, a disabled ('off') event 2.0 -- this lane
+                      is the HBM bytes-per-param budget the optimizer
+                      state asserts against.
 
 v1 (width 8, PRs 1-3) is layout v2 without [8]/[9] and with 0.0 instead
-of the -1.0 disabled sentinel; every consumer keys on STATS_WIDTH
+of the -1.0 disabled sentinel; v2 (width 10, PRs 4-7) is v3 without the
+optimizer-event lanes [10]/[11]. Every consumer keys on STATS_WIDTH
 (tests/test_stats_contract.py guards the migration).
 """
 from __future__ import annotations
@@ -66,6 +83,10 @@ from repro.kernels.ref import TAG_BF16, TAG_E4M3, TAG_NVFP4, MixedOperand
 
 __all__ = [
     "STATS_WIDTH",
+    "EVENT_GEMM",
+    "EVENT_GRAD",
+    "EVENT_MOMENT_M",
+    "EVENT_MOMENT_V",
     "quant_dequant",
     "quant_dequant_with_scales",
     "mor_quantize",
@@ -73,7 +94,16 @@ __all__ = [
     "partition_of",
 ]
 
-STATS_WIDTH = 10
+STATS_WIDTH = 12
+
+# Stats lane [10] (event_kind) values. GEMM operand events are emitted
+# by this module; the optimizer layer (repro.optim) stamps its rows so
+# aggregation consumers can split training-math events from
+# training-state (gradient / moment storage) events.
+EVENT_GEMM = 0.0
+EVENT_GRAD = 1.0
+EVENT_MOMENT_M = 2.0
+EVENT_MOMENT_V = 3.0
 
 
 def partition_of(policy: MoRPolicy) -> Partition:
@@ -109,6 +139,14 @@ def _stats(
     decision, rel_err, amax, f_e4, f_e5, f_bf, nz_frac, m_g,
     f_nv=0.0, micro_bpe=0.0,
 ) -> jnp.ndarray:
+    # [11] payload_bpe follows from the tag mixture: fp8 arms store one
+    # byte/elt, BF16 two, NVFP4 half a byte plus one E4M3 micro-scale
+    # byte per NVFP4_MICRO elements (= 0.5625 total).
+    payload_bpe = (
+        jnp.float32(f_e4) + jnp.float32(f_e5)
+        + 2.0 * jnp.float32(f_bf)
+        + (0.5 + 1.0 / _kref.NVFP4_MICRO) * jnp.float32(f_nv)
+    )
     return jnp.stack(
         [
             jnp.float32(decision),
@@ -121,6 +159,8 @@ def _stats(
             jnp.float32(m_g),
             jnp.float32(f_nv),
             jnp.float32(micro_bpe),
+            jnp.float32(EVENT_GEMM),
+            payload_bpe,
         ]
     )
 
@@ -285,7 +325,7 @@ def mor_quantize(
     >>> y.shape == x.shape and y.dtype == x.dtype
     True
     >>> stats.shape            # the STATS_WIDTH vector
-    (10,)
+    (12,)
     >>> float(stats[5])        # all-ones quantizes exactly: no BF16 blocks
     0.0
     """

@@ -424,13 +424,15 @@ def kv_bytes_per_element(tags: jnp.ndarray) -> jnp.ndarray:
 
 
 def kv_stats_row(tags: jnp.ndarray) -> jnp.ndarray:
-    """One STATS_WIDTH v2 stats row for a KV-cache quantization event.
+    """One STATS_WIDTH v3 stats row for a KV-cache quantization event.
 
     Same layout as the GEMM events (core.mor): [0] decision (1.0, the
     cache tier always quantizes), [3..5] frac_e4m3/e5m2/bf16, [6] block
     count, [7] m_g slot (1.0 -- per-event group), [8] frac_nvfp4,
-    [9] micro-scale bytes per element. [1]/[2] (rel_err, amax) are 0:
-    the cache path never re-reads its operand to price the error.
+    [9] micro-scale bytes per element, [11] payload bytes/element of
+    the tag mixture. [1]/[2] (rel_err, amax) are 0: the cache path
+    never re-reads its operand to price the error. [10] (event_kind)
+    stays 0 -- cache rows ride the GEMM-event channel.
     """
     from repro.core.mor import STATS_WIDTH
 
@@ -447,4 +449,8 @@ def kv_stats_row(tags: jnp.ndarray) -> jnp.ndarray:
     row = row.at[7].set(1.0)
     row = row.at[8].set(f_nv)
     row = row.at[9].set(f_nv / NVFP4_MICRO)
+    row = row.at[11].set(
+        frac(TAG_E4M3) + frac(TAG_E5M2) + 2.0 * frac(TAG_BF16)
+        + (0.5 + 1.0 / NVFP4_MICRO) * f_nv
+    )
     return row

@@ -16,6 +16,7 @@ before softmax (Megatron-style), so quality is unaffected.
 from __future__ import annotations
 
 import functools
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -214,8 +215,15 @@ def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
     unit = _unit_types(cfg)
     params["blocks"] = {}
     for t in unit:
-        keys = jax.random.split(jax.random.fold_in(kB, hash(t) % 2**31),
-                                cfg.n_units)
+        # crc32, not hash(): str hashing is salted per process
+        # (PYTHONHASHSEED), which made init_params draw *different
+        # parameters in every process* -- differential tests comparing
+        # runs across processes, and anything pinning draw-dependent
+        # values, were silently seeded by the interpreter.
+        keys = jax.random.split(
+            jax.random.fold_in(kB, zlib.crc32(t.encode()) % 2**31),
+            cfg.n_units,
+        )
         params["blocks"][t] = jax.vmap(
             lambda k: _LAYER_INIT[t](k, cfg)
         )(keys)

@@ -4,6 +4,16 @@ Model params live in BF16; the optimizer state holds an f32 master copy
 plus Adam moments, all ZeRO-1-shardable (see repro.sharding.rules). The
 update runs on the master weights and re-casts to BF16 params.
 
+With a :class:`~repro.optim.moments.MomentPolicy` the Adam moments are
+stored as packed MoR payloads (:class:`~repro.optim.moments.PackedMoment`
+leaves): decoded to f32 at the top of the update, re-encoded through the
+real per-block selection machinery at the bottom -- see
+repro.optim.moments for the bytes-per-param budget and docs/training.md
+for the layout. ``OptState.ef`` carries the gradient-compression
+error-feedback residual when the train step runs an ``*_ef`` mode
+(repro.optim.compress); it defaults to None and is absent from the
+pytree then.
+
 No optax in this environment -- this is a standalone implementation with
 global-norm clipping and a cosine LR schedule.
 """
@@ -15,8 +25,22 @@ from typing import Any, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.mor import EVENT_MOMENT_M, EVENT_MOMENT_V
+from repro.optim.moments import (
+    MomentPolicy,
+    PackedMoment,
+    decode_any,
+    maybe_encode_moment,
+    mean_logical_bpe,
+    moment_stats_rows,
+)
+
 __all__ = ["AdamWConfig", "OptState", "init_opt_state", "adamw_update",
            "cosine_lr", "global_norm"]
+
+
+def _is_pm(x) -> bool:
+    return isinstance(x, PackedMoment)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,19 +58,35 @@ class AdamWConfig:
 
 class OptState(NamedTuple):
     master: Any  # f32 master weights (pytree like params)
-    m: Any
+    m: Any  # f32 moments, or PackedMoment leaves under a MomentPolicy
     v: Any
     step: jnp.ndarray  # () int32
+    # Gradient-compression error-feedback residual (f32, params-shaped)
+    # for the '*_ef' compress modes; None (an empty subtree) otherwise.
+    ef: Any = None
 
 
-def init_opt_state(params) -> OptState:
+def init_opt_state(
+    params,
+    moments: Optional[MomentPolicy] = None,
+    ef: bool = False,
+) -> OptState:
+    """Fresh optimizer state. ``moments`` packs the Adam moment leaves
+    (repro.optim.moments); ``ef=True`` allocates the error-feedback
+    residual tree the '*_ef' gradient-compression modes thread through
+    steps."""
     f32 = lambda p: p.astype(jnp.float32)
     zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+
+    def moment(p, kind):
+        return maybe_encode_moment(zeros(p), moments, kind)
+
     return OptState(
         master=jax.tree.map(f32, params),
-        m=jax.tree.map(zeros, params),
-        v=jax.tree.map(zeros, params),
+        m=jax.tree.map(lambda p: moment(p, EVENT_MOMENT_M), params),
+        v=jax.tree.map(lambda p: moment(p, EVENT_MOMENT_V), params),
         step=jnp.zeros((), jnp.int32),
+        ef=jax.tree.map(zeros, params) if ef else None,
     )
 
 
@@ -79,8 +119,19 @@ def adamw_update(
     opt_state: OptState,
     *,
     decay_mask=None,
+    moments: Optional[MomentPolicy] = None,
 ) -> Tuple[Any, OptState, dict]:
-    """Returns (new bf16 params, new opt state, metrics)."""
+    """Returns (new bf16 params, new opt state, metrics).
+
+    With ``moments``, PackedMoment leaves in ``opt_state.m``/``.v`` are
+    decoded to f32 for the update and the new moments are re-encoded
+    through the same policy (the dense/packed split per leaf is static,
+    so the state pytree structure is step-invariant). Metrics then also
+    carry the optimizer-event stats rows (``moment_stats_m/v``, used by
+    train_step's summarizer) and the parameter-weighted logical
+    bytes/param of each packed moment tree (``moment_bpe_m/v``).
+    ``opt_state.ef`` rides through untouched -- the gradient
+    compression that owns it runs *before* this update."""
     step = opt_state.step + 1
     lr = cosine_lr(cfg, step)
 
@@ -94,11 +145,13 @@ def adamw_update(
     c1 = 1.0 - b1 ** step.astype(jnp.float32)
     c2 = 1.0 - b2 ** step.astype(jnp.float32)
 
+    m_dec = jax.tree.map(decode_any, opt_state.m, is_leaf=_is_pm)
+    v_dec = jax.tree.map(decode_any, opt_state.v, is_leaf=_is_pm)
     new_m = jax.tree.map(
-        lambda m, g: b1 * m + (1 - b1) * g, opt_state.m, grads
+        lambda m, g: b1 * m + (1 - b1) * g, m_dec, grads
     )
     new_v = jax.tree.map(
-        lambda v, g: b2 * v + (1 - b2) * g * g, opt_state.v, grads
+        lambda v, g: b2 * v + (1 - b2) * g * g, v_dec, grads
     )
 
     if decay_mask is None:
@@ -119,4 +172,21 @@ def adamw_update(
         lambda p: p.astype(jnp.bfloat16), new_master
     )
     metrics = {"lr": lr, "grad_norm": gnorm}
-    return new_params, OptState(new_master, new_m, new_v, step), metrics
+    if moments is not None and moments.enabled:
+        new_m = jax.tree.map(
+            lambda x: maybe_encode_moment(x, moments, EVENT_MOMENT_M),
+            new_m,
+        )
+        new_v = jax.tree.map(
+            lambda x: maybe_encode_moment(x, moments, EVENT_MOMENT_V),
+            new_v,
+        )
+        for name, tree in (("m", new_m), ("v", new_v)):
+            rows = moment_stats_rows(tree)
+            if rows is not None:
+                metrics[f"moment_stats_{name}"] = rows
+            metrics[f"moment_bpe_{name}"] = mean_logical_bpe(tree)
+    new_state = OptState(
+        new_master, new_m, new_v, step, opt_state.ef
+    )
+    return new_params, new_state, metrics

@@ -1,0 +1,228 @@
+"""Adam moments as packed MoR payloads (compressed optimizer state).
+
+A dense-f32 Adam state costs 8 bytes/param (two f32 moments) on top of
+the 4-byte master copy. This module stores each moment leaf as a
+:class:`~repro.kernels.ref.MixedOperand` instead -- the same per-block
+tag-selected layout the mixed GEMM consumes -- encoded through
+:func:`repro.core.mor.quantize_for_gemm`, i.e. the *real* selection
+machinery: per-block Eq. 3 error comparison and Eq. 4 dynamic-range
+gates decide which representation each 128x128 block of the moment
+gets. A fully-fp8 selection stores ~1 B/param per moment (+8 bytes per
+block of tag+scale, ~0.0005 B/param); a fully-NVFP4 second moment
+0.5625 B/param. :func:`logical_bytes_per_param` (stats-derived, inside
+jit) and :func:`physical_bytes_per_param` (host-side, after
+``compact()``) assert the budget -- tests/test_train_compress.py pins
+<= 1.05 B/param for fully-fp8 and <= 0.65 for fully-NVFP4 sub4 second
+moments, and ``bench_kernels`` gates ``moment_bytes_per_param_milli``.
+
+The second moment is non-negative with a huge dynamic range (squared
+gradients), which is exactly the tensor class the paper's Eq. 4 gate
+promotes to wider-exponent arms -- :data:`WIDE_RANGE_V` pins more
+blocks to the E5M2/BF16 arms by tightening the acceptance threshold,
+and a ``recipe='sub4'`` v-policy adds the NVFP4 arm for the
+narrow-range majority. Moments are decoded to f32 inside the optimizer
+update and re-encoded after (optim.adamw); the EMA structure tolerates
+the per-step quantization error without error feedback because each
+step re-quantizes the *accumulated* state, not a residual stream.
+
+Leaves smaller than ``MomentPolicy.min_leaf`` elements stay dense f32:
+norm scales and biases are a rounding error of the byte budget, and the
+per-block metadata would cost more than it saves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mor import (
+    EVENT_MOMENT_M,
+    EVENT_MOMENT_V,
+    STATS_WIDTH,
+    quantize_for_gemm,
+)
+from repro.core.policy import MoRPolicy
+from repro.kernels.ref import MixedOperand
+
+__all__ = [
+    "MomentPolicy",
+    "PackedMoment",
+    "FP8_MOMENTS",
+    "WIDE_RANGE_V",
+    "SUB4_V_MOMENTS",
+    "encode_moment",
+    "decode_moment",
+    "maybe_encode_moment",
+    "decode_any",
+    "moment_stats_rows",
+    "mean_logical_bpe",
+    "block_overhead_bpe",
+    "logical_bytes_per_param",
+    "physical_bytes_per_param",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentPolicy:
+    """Which MoR recipe each Adam moment is stored under.
+
+    ``m`` / ``v`` are per-moment :class:`MoRPolicy` values ('off' =
+    dense f32, the pre-PR-8 layout). ``min_leaf`` is the element-count
+    floor below which a leaf stays dense regardless."""
+
+    m: MoRPolicy = MoRPolicy(recipe="off")
+    v: MoRPolicy = MoRPolicy(recipe="off")
+    min_leaf: int = 1024
+
+    @property
+    def enabled(self) -> bool:
+        return self.m.enabled or self.v.enabled
+
+    def replace(self, **kw) -> "MomentPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+# Both moments per-block three-way selected (the training default).
+FP8_MOMENTS = MomentPolicy(
+    m=MoRPolicy(recipe="sub3"), v=MoRPolicy(recipe="sub3")
+)
+# Second-moment policy biased toward the wide-exponent arms: squared
+# gradients span a huge dynamic range, so the Eq. 3 acceptance gate is
+# tightened -- blocks that would scrape through E4M3 at 4.5% pin to
+# E5M2/BF16 instead.
+WIDE_RANGE_V = MoRPolicy(recipe="sub3", threshold=0.02)
+# NVFP4 arm on the second moment (sub4 cascade; 0.5625 B/param when
+# fully selected).
+SUB4_V_MOMENTS = MomentPolicy(
+    m=MoRPolicy(recipe="sub3"), v=MoRPolicy(recipe="sub4")
+)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedMoment:
+    """One moment leaf in the mixed block layout.
+
+    ``mo`` holds the payload lanes in the leaf's 2-D quantization view
+    (:func:`repro.optim.compress.leaf2d`); ``stats`` is the encode
+    event's STATS_WIDTH row (event_kind stamped EVENT_MOMENT_M/V);
+    ``shape`` is the original leaf shape, static."""
+
+    mo: MixedOperand
+    stats: jnp.ndarray
+    shape: Tuple[int, ...]
+
+    def tree_flatten(self):
+        return (self.mo, self.stats), (tuple(self.shape),)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mo, stats = children
+        return cls(mo=mo, stats=stats, shape=aux[0])
+
+
+def _is_pm(x) -> bool:
+    return isinstance(x, PackedMoment)
+
+
+def encode_moment(
+    x: jnp.ndarray, policy: MoRPolicy, kind: float
+) -> PackedMoment:
+    """Pack one f32 moment leaf. The 2-D view is cast to bf16 first:
+    BF16 *is* the top-precision arm of every recipe -- the stored
+    representation is per-block {fp8/nvfp4 payload | bf16}, never f32.
+    """
+    from repro.optim.compress import leaf2d  # sibling; late import
+
+    x2d = leaf2d(x).astype(jnp.bfloat16)
+    mo, stats = quantize_for_gemm(x2d, policy)
+    return PackedMoment(
+        mo=mo, stats=stats.at[10].set(kind), shape=tuple(x.shape)
+    )
+
+
+def decode_moment(pm: PackedMoment) -> jnp.ndarray:
+    """The stored f32 values of a packed moment leaf."""
+    return pm.mo.dequant().astype(jnp.float32).reshape(pm.shape)
+
+
+def maybe_encode_moment(
+    x: jnp.ndarray,
+    moments: Optional[MomentPolicy],
+    kind: float,
+) -> Any:
+    """Pack ``x`` under the policy for ``kind``, or return it dense.
+
+    The dense/packed split is a *static* property of (leaf size,
+    policy) so init and every update step agree on the pytree
+    structure."""
+    if moments is None:
+        return x
+    pol = moments.m if kind == EVENT_MOMENT_M else moments.v
+    if not pol.enabled or x.size < moments.min_leaf:
+        return x
+    return encode_moment(x, pol, kind)
+
+
+def decode_any(x: Any) -> jnp.ndarray:
+    """decode_moment for packed leaves, identity for dense ones."""
+    return decode_moment(x) if _is_pm(x) else x
+
+
+def block_overhead_bpe(mo: MixedOperand) -> float:
+    """Static per-element byte cost of the tag/scale grids (int32 tag +
+    f32 scale = 8 bytes per block), over the *logical* element count."""
+    nblocks = int(np.prod(mo.tags.shape))
+    nelem = int(np.prod(mo.shape))
+    return 8.0 * nblocks / max(nelem, 1)
+
+
+def logical_bytes_per_param(pm: PackedMoment) -> jnp.ndarray:
+    """Payload bytes/param implied by the encode event's tag mixture
+    (stats lane [11]) plus the static block metadata overhead.
+    Traceable -- this is the in-jit budget the train step reports."""
+    return pm.stats[11] + jnp.float32(block_overhead_bpe(pm.mo))
+
+
+def physical_bytes_per_param(pm: PackedMoment) -> float:
+    """Host-side physical HBM bytes/param of the pack after
+    ``compact()`` -- unused payload lanes really dropped. This is the
+    number the acceptance budget is asserted against in tests."""
+    mo = pm.mo.compact()
+    nbytes = sum(
+        l.size * l.dtype.itemsize
+        for l in (mo.payload_q, mo.payload_bf16, mo.payload_nib,
+                  mo.micro_scales, mo.tags, mo.scales)
+    )
+    return nbytes / max(int(np.prod(pm.shape)), 1)
+
+
+def moment_stats_rows(tree) -> Optional[jnp.ndarray]:
+    """Stack the STATS_WIDTH rows of every packed leaf in a moment
+    tree -- the optimizer-event rows the train step folds into its
+    metrics. None when the tree holds no packed leaves."""
+    rows = [
+        l.stats for l in jax.tree.leaves(tree, is_leaf=_is_pm)
+        if _is_pm(l)
+    ]
+    if not rows:
+        return None
+    return jnp.stack(rows).reshape(-1, STATS_WIDTH)
+
+
+def mean_logical_bpe(tree) -> jnp.ndarray:
+    """Parameter-weighted mean logical bytes/param over the packed
+    leaves of a moment tree (0.0 when none are packed)."""
+    leaves = [
+        l for l in jax.tree.leaves(tree, is_leaf=_is_pm) if _is_pm(l)
+    ]
+    if not leaves:
+        return jnp.float32(0.0)
+    sizes = jnp.asarray(
+        [float(np.prod(l.shape)) for l in leaves], jnp.float32
+    )
+    bpes = jnp.stack([logical_bytes_per_param(l) for l in leaves])
+    return jnp.sum(bpes * sizes) / jnp.sum(sizes)

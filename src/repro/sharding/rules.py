@@ -37,7 +37,8 @@ __all__ = [
     "param_specs", "opt_state_spec_from_param", "batch_spec", "cache_specs_tree",
     "named_shardings", "zero1_spec",
     "mixed_operand_pspec", "qtensor_pspec_from_dense",
-    "quantized_param_specs", "compat_shard_map",
+    "quantized_param_specs", "packed_moment_pspec", "opt_state_specs",
+    "compat_shard_map",
 ]
 
 # name-fragment -> (spec builder). Matched against the flattened path.
@@ -324,3 +325,85 @@ class _ShapeView:
     def __init__(self, shape):
         self.shape = tuple(shape)
         self.ndim = len(self.shape)
+
+
+# ------------------------------------------------ compressed opt state --
+
+
+def packed_moment_pspec(pm, rows=None, mesh: Optional[Mesh] = None):
+    """A PackedMoment-shaped PartitionSpec for one packed Adam moment.
+
+    ZeRO-style: the quantization-view *rows* shard over ``rows``
+    (normally the 'data' axis) when the block grid divides the axis
+    size -- whole 128-row block rows move together with their tag/scale
+    cells, the same invariant as :func:`mixed_operand_pspec`. An axis
+    that does not divide the block grid is demoted to replicated
+    (quantized leaves shard in whole blocks or not at all). The stats
+    row is replicated.
+    """
+    from repro.optim.moments import PackedMoment  # avoid import cycle
+
+    a_r = rows
+    if mesh is not None and a_r is not None:
+        if pm.mo.tags.shape[-2] % _axis_size(mesh, a_r):
+            a_r = None
+    pq, pbf, nib, ms, tags, scales = mixed_operand_pspec(
+        pm.mo, rows=a_r, cols=None
+    )
+    mo_spec = MixedOperand(
+        payload_q=pq, payload_bf16=pbf, tags=tags, scales=scales,
+        block=pm.mo.block, shape=pm.mo.shape,
+        payload_nib=nib, micro_scales=ms, has_nvfp4=pm.mo.has_nvfp4,
+    )
+    return PackedMoment(
+        mo=mo_spec, stats=P(None), shape=pm.shape
+    )
+
+
+def opt_state_specs(
+    cfg: ArchConfig,
+    opt_state,
+    data_axes=("data",),
+    mesh: Optional[Mesh] = None,
+):
+    """An OptState-shaped PartitionSpec tree for the (possibly
+    MoR-compressed) optimizer state.
+
+    Master weights and dense moment leaves get the param spec extended
+    with ZeRO-1 data sharding (:func:`zero1_spec`); PackedMoment leaves
+    get :func:`packed_moment_pspec` (rows over the data axis, block-
+    grid divisibility demotion under ``mesh``); the error-feedback
+    residual -- gradient-shaped -- reuses the master layout, matching
+    the ZeRO-2 gradient constraint in the train step; ``step`` is
+    replicated.
+    """
+    from repro.optim.adamw import OptState
+    from repro.optim.moments import PackedMoment  # avoid import cycle
+
+    rows = data_axes if len(data_axes) > 1 else data_axes[0]
+    pspecs = param_specs(cfg, opt_state.master)
+
+    def ext(spec, leaf):
+        return zero1_spec(spec, leaf.shape, data_axes)
+
+    master_specs = jax.tree.map(ext, pspecs, opt_state.master)
+
+    def moment_specs(tree):
+        return jax.tree.map(
+            lambda leaf, spec: (
+                packed_moment_pspec(leaf, rows=rows, mesh=mesh)
+                if isinstance(leaf, PackedMoment)
+                else zero1_spec(spec, leaf.shape, data_axes)
+            ),
+            tree, pspecs,
+            is_leaf=lambda x: isinstance(x, PackedMoment),
+        )
+
+    return OptState(
+        master=master_specs,
+        m=moment_specs(opt_state.m),
+        v=moment_specs(opt_state.v),
+        step=P(),
+        ef=(None if opt_state.ef is None
+            else jax.tree.map(ext, pspecs, opt_state.ef)),
+    )

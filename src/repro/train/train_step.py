@@ -13,10 +13,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core import STATS_WIDTH, MoRDotPolicy, with_mesh_axes
+from repro.core import STATS_WIDTH, MoRDotPolicy, MoRPolicy, with_mesh_axes
 from repro.models import make_loss_fn, make_tokens
 from repro.models.common import constrain
-from repro.optim.adamw import AdamWConfig, OptState, adamw_update
+from repro.optim.adamw import (
+    AdamWConfig,
+    OptState,
+    adamw_update,
+    global_norm,
+)
+from repro.optim.compress import DEFAULT_GRAD_POLICY
+from repro.optim.moments import MomentPolicy
 from repro.sharding import rules as _rules
 
 __all__ = ["TrainConfig", "make_train_step", "summarize_mor_stats"]
@@ -28,8 +35,17 @@ class TrainConfig:
     # Microbatching: split the global batch into n accumulation steps.
     grad_accum: int = 1
     remat: bool = True
-    # Cross-pod gradient compression (beyond-paper; repro.optim.compress).
-    compress_grads: str = "none"  # 'none' | 'fp8' | 'fp8_ef'
+    # Gradient compression (repro.optim.compress): legacy per-tensor
+    # E4M3 ('fp8'/'fp8_ef') or per-block MoR selection ('mor'/'mor_ef')
+    # under ``grad_policy``. The '*_ef' modes keep an error-feedback
+    # residual in OptState.ef -- create the state with
+    # ``init_opt_state(params, ef=True)``.
+    compress_grads: str = "none"  # 'none'|'fp8'|'fp8_ef'|'mor'|'mor_ef'
+    grad_policy: MoRPolicy = DEFAULT_GRAD_POLICY
+    # Adam moments stored as packed MoR payloads (repro.optim.moments);
+    # None keeps the dense-f32 layout. Must match the MomentPolicy the
+    # opt state was initialized with.
+    moments: MomentPolicy | None = None
     aux_coef: float = 0.01
     # ZeRO-2: constrain gradients to the data-sharded optimizer layout so
     # GSPMD reduce-scatters them instead of all-reducing (halves DP
@@ -46,7 +62,9 @@ class TrainConfig:
     mor_mesh_axes: Tuple[str, ...] = ()
 
 
-def summarize_mor_stats(fwd_stats, bwd_stats) -> Dict[str, jnp.ndarray]:
+def summarize_mor_stats(
+    fwd_stats, bwd_stats, opt_stats=None
+) -> Dict[str, jnp.ndarray]:
     """Reduce the per-layer/per-event stats pytrees to scalar metrics.
 
     Disabled-policy events (recipe 'off', decision column == -1) are
@@ -54,6 +72,12 @@ def summarize_mor_stats(fwd_stats, bwd_stats) -> Dict[str, jnp.ndarray]:
     construction, and averaging those rows in dragged ``fwd_frac_bf16``
     toward 1 even when every *enabled* event quantized. With no enabled
     events at all, every metric is 0.
+
+    ``opt_stats`` carries the optimizer-event rows (stats layout v3,
+    event_kind > 0): gradient-compression and packed-moment encode
+    events, summarized into the ``opt_*`` family the same way --
+    ``opt_frac_bf16``/``opt_rel_err`` plus ``opt_payload_bpe`` (mean
+    stats lane [11], the logical bytes/param of the compressed state).
     """
 
     def rows(tree):
@@ -83,6 +107,11 @@ def summarize_mor_stats(fwd_stats, bwd_stats) -> Dict[str, jnp.ndarray]:
         cat = rows(bwd_stats)
         out["bwd_frac_bf16"] = frac(cat, 5)
         out["bwd_rel_err"] = frac(cat, 1)
+    if opt_stats is not None:
+        cat = rows(opt_stats)
+        out["opt_frac_bf16"] = frac(cat, 5)
+        out["opt_rel_err"] = frac(cat, 1)
+        out["opt_payload_bpe"] = frac(cat, 11)
     return out
 
 
@@ -101,7 +130,15 @@ def make_train_step(
     grad_fn = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)
 
     if tcfg.compress_grads != "none":
-        from repro.optim.compress import compress_decompress_grads
+        from repro.optim.compress import compress_grads as _compress
+
+        # Gradient compression quantizes *global* gradients; under a
+        # shard_map trainer its statistics must allreduce like every
+        # other event's.
+        grad_policy = (
+            tcfg.grad_policy.replace(mesh_axes=tuple(tcfg.mor_mesh_axes))
+            if tcfg.mor_mesh_axes else tcfg.grad_policy
+        )
 
     def single_micro(params, tokens, batch):
         (total, aux), (g_params, g_tokens) = grad_fn(params, tokens, batch)
@@ -163,21 +200,37 @@ def make_train_step(
             )
             g_params = to_zero2(g_params)
 
+        grad_stats = None
+        new_ef = opt_state.ef
         if tcfg.compress_grads != "none":
-            g_params = compress_decompress_grads(
-                g_params, mode=tcfg.compress_grads
+            g_params, new_ef, grad_stats = _compress(
+                g_params, mode=tcfg.compress_grads,
+                ef_state=opt_state.ef, policy=grad_policy,
             )
 
         new_params, new_opt, opt_metrics = adamw_update(
-            tcfg.optimizer, g_params, opt_state
+            tcfg.optimizer, g_params, opt_state, moments=tcfg.moments
         )
+        new_opt = new_opt._replace(ef=new_ef)
+        # Optimizer-event rows (stats v3): gradient-compression events
+        # plus the packed-moment encode events adamw_update reports.
+        opt_rows = {
+            "grad": grad_stats,
+            "m": opt_metrics.pop("moment_stats_m", None),
+            "v": opt_metrics.pop("moment_stats_v", None),
+        }
+        opt_rows = {k: s for k, s in opt_rows.items() if s is not None}
         metrics = {
             "loss": aux["loss"],
             "total_loss": total,
             "aux_loss": aux["aux_loss"],
             **opt_metrics,
-            **summarize_mor_stats(aux.get("mor_fwd"), g_tokens),
+            **summarize_mor_stats(
+                aux.get("mor_fwd"), g_tokens, opt_rows or None
+            ),
         }
+        if new_ef is not None:
+            metrics["ef_norm"] = global_norm(new_ef)
         return new_params, new_opt, metrics
 
     return train_step

@@ -1,4 +1,4 @@
-"""The frozen bench_kernels --json schema (repro.bench_kernels/v1).
+"""The frozen bench_kernels --json schema (repro.bench_kernels).
 
 Pure-stdlib tests: the validator must be usable by consumers without
 jax. CI's slow lane additionally validates the real artifact produced
@@ -69,19 +69,21 @@ def test_legacy_bare_list_rejected():
 def test_known_versions_accepted_unknown_rejected():
     """Each additive bump keeps stored history validating; unknown
     versions stay hard errors."""
-    from benchmarks.schema import SCHEMA_V1, SCHEMA_V2, SCHEMA_V3
+    from benchmarks.schema import (
+        SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4,
+    )
 
     doc = make_artifact(GOOD_CSV)
-    assert doc["schema"] == SCHEMA_V3
+    assert doc["schema"] == SCHEMA_V4
     validate_artifact(doc)
-    for old in (SCHEMA_V1, SCHEMA_V2):
+    for old in (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3):
         prev = copy.deepcopy(doc)
         prev["schema"] = old
         validate_artifact(prev)
-    v4 = copy.deepcopy(doc)
-    v4["schema"] = "repro.bench_kernels/v4"
+    v5 = copy.deepcopy(doc)
+    v5["schema"] = "repro.bench_kernels/v5"
     with pytest.raises(ValueError, match="schema mismatch"):
-        validate_artifact(v4)
+        validate_artifact(v5)
 
 
 def test_serve_kv_cache_row_names_fit_grammar():
@@ -92,6 +94,22 @@ def test_serve_kv_cache_row_names_fit_grammar():
         "kv_bytes_per_token=84;kv_bpe_milli_hot=1000;"
         "kv_bpe_milli_cold=562",
         "kernel/flash_qoffset_interp,431.0,S=8;T=64;max_err=2.1e-07",
+    ]
+    validate_artifact(make_artifact(rows))
+
+
+def test_optim_state_row_names_fit_grammar():
+    """The v4 contract's compressed training-state row ids parse,
+    including the gated moment_bytes_per_param_milli counter."""
+    rows = [
+        "kernel/grad_compress_mor_ef_1024x1024,3371.2,"
+        "payload_bpe=1.188;ef=1",
+        "kernel/optim_moments_fp8_1024x1024,54028.8,"
+        "moment_bytes_per_param_milli=1041;payload_bpe=1.000;"
+        "frac_nvfp4=0.00",
+        "kernel/optim_moments_sub4_1024x1024,79202.9,"
+        "moment_bytes_per_param_milli=610;payload_bpe=0.562;"
+        "frac_nvfp4=1.00",
     ]
     validate_artifact(make_artifact(rows))
 

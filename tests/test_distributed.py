@@ -195,7 +195,8 @@ def test_fp8_ef_tracks_uncompressed():
             gq, ef = compress_decompress_grads(
                 {'w': 2 * (w_c - tgt)}, 'fp8_ef', ef)
             w_c = w_c - lr * gq['w']
-            gq2 = compress_decompress_grads({'w': 2 * (w_nc - tgt)}, 'fp8')
+            gq2, _ = compress_decompress_grads(
+                {'w': 2 * (w_nc - tgt)}, 'fp8')
             w_nc = w_nc - lr * gq2['w']
         err_ef = float(jnp.linalg.norm(w_c - w_ref))
         err_nc = float(jnp.linalg.norm(w_nc - w_ref))

@@ -1,6 +1,6 @@
-"""Stats-vector contract guards (layout v2, STATS_WIDTH = 10).
+"""Stats-vector contract guards (layout v3, STATS_WIDTH = 12).
 
-Three families:
+Four families:
 
 * **Width guard** -- every producer and consumer of the per-event MoR
   stats vector must key on ``repro.core.STATS_WIDTH``; these tests make
@@ -8,13 +8,18 @@ Three families:
   summarizer, the model token channel behind serve/engine and
   launch/dryrun, the QTensor serving stats) instead of silently
   dropping or misreading rows.
+* **v3 lanes** -- [10] event_kind (EVENT_GEMM/GRAD/MOMENT_M/MOMENT_V)
+  and [11] payload bytes/element implied by the tag mixture; every
+  producer stamps them consistently (GEMM events default to kind 0,
+  optimizer events re-stamp; 'off' rows report the bf16 2.0 B/elt).
 * **Disabled-event filtering** -- recipe='off' rows carry the -1.0
   decision sentinel and must not dilute the aggregated fractions.
 * **grad_accum invariance** -- reported fwd_*/bwd_* metrics must be
   identical (up to f32 reassociation) for grad_accum in {1, 4} on a
   constant batch: the bwd stats used to be jnp.sum'd over the scan
   (inflating them by n) and fwd stats reported only the last
-  microbatch.
+  microbatch. (tests/test_train_compress.py extends this to the
+  compressed-state opt_* metrics.)
 """
 import dataclasses
 
@@ -24,6 +29,10 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    EVENT_GEMM,
+    EVENT_GRAD,
+    EVENT_MOMENT_M,
+    EVENT_MOMENT_V,
     STATS_WIDTH,
     MoRPolicy,
     mor_quantize,
@@ -45,11 +54,46 @@ def test_every_recipe_emits_stats_width(recipe):
     s = np.asarray(stats)
     if recipe == "off":
         assert s[0] == -1.0  # the disabled sentinel
+        assert s[11] == 2.0  # passthrough rows price the bf16 payload
     else:
         assert s[0] >= 0.0
     # v2 lanes exist and are sane for non-sub4 recipes.
     if recipe not in ("sub4",):
         assert s[8] == 0.0 and s[9] == 0.0
+    # v3 lanes: quantization events default to the GEMM kind; the
+    # payload-bpe lane is the tag-mixture price in [NVFP4, BF16].
+    assert s[10] == EVENT_GEMM
+    assert 0.5 <= s[11] <= 2.0
+
+
+@pytest.mark.parametrize("recipe", ["sub2", "sub3", "sub4"])
+def test_payload_bpe_lane_matches_tag_mixture(recipe):
+    """[11] = f_e4m3 + f_e5m2 + 2*f_bf16 + (0.5 + 1/16)*f_nvfp4."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((128, 128)) * np.exp2(
+        rng.integers(-16, 16, (128, 128)))
+    _, stats = mor_quantize(
+        jnp.asarray(x, jnp.bfloat16),
+        MoRPolicy(recipe=recipe, backend="xla", block_shape=(32, 32)),
+    )
+    s = np.asarray(stats)
+    want = s[3] + s[4] + 2.0 * s[5] + (0.5 + 1.0 / 16.0) * s[8]
+    assert s[11] == pytest.approx(want, rel=1e-6)
+
+
+def test_optimizer_events_stamp_kind_lane():
+    from repro.optim.compress import compress_grads
+    from repro.optim.moments import encode_moment
+
+    g = {"w": jnp.ones((256, 128), jnp.float32)}
+    _, _, stats = compress_grads(
+        g, "mor", policy=MoRPolicy(recipe="sub3", backend="xla"))
+    assert float(stats["w"][10]) == EVENT_GRAD
+    pm = encode_moment(
+        jnp.ones((256, 128)), MoRPolicy(recipe="sub3", backend="xla"),
+        kind=EVENT_MOMENT_V)
+    assert float(pm.stats[10]) == EVENT_MOMENT_V
+    assert EVENT_MOMENT_M != EVENT_MOMENT_V != EVENT_GRAD != EVENT_GEMM
 
 
 def test_token_channel_width_matches():
@@ -120,6 +164,31 @@ def test_summarize_skips_disabled_rows():
     out = summarize_mor_stats({"on": jnp.asarray(on),
                                "off": jnp.asarray(off)}, None)
     assert float(out["fwd_frac_bf16"]) == pytest.approx(1.0 / 3.0)
+
+
+def test_summarize_opt_rows():
+    """The optimizer-event family: opt_frac_bf16 / opt_rel_err /
+    opt_payload_bpe aggregate the event_kind > 0 rows with the same
+    disabled-row filtering as the fwd/bwd families."""
+    rows = np.zeros((4, STATS_WIDTH), np.float32)
+    rows[:, 0] = 1.0
+    rows[:, 1] = 0.02
+    rows[:, 10] = EVENT_GRAD
+    rows[:, 11] = 1.0
+    rows[1, 5] = 1.0   # one bf16 block event
+    rows[1, 11] = 2.0
+    off = np.zeros((2, STATS_WIDTH), np.float32)
+    off[:, 0] = -1.0
+    off[:, 5] = 1.0
+    off[:, 11] = 2.0
+    out = summarize_mor_stats(None, None,
+                              {"g": jnp.asarray(rows),
+                               "off": jnp.asarray(off)})
+    assert set(out) == {"opt_frac_bf16", "opt_rel_err",
+                        "opt_payload_bpe"}
+    assert float(out["opt_frac_bf16"]) == pytest.approx(0.25)
+    assert float(out["opt_rel_err"]) == pytest.approx(0.02)
+    assert float(out["opt_payload_bpe"]) == pytest.approx(1.25)
 
 
 def test_summarize_all_disabled_is_zero():

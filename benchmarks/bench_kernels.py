@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import json
 import os
-import re
 import subprocess
 import sys
 import tempfile
@@ -28,11 +27,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts
+from repro.analysis.hlo_rules import (
+    CrossLoweringUnavailable,
+    count_custom_calls,
+    operand_sized_ops,
+    tpu_lowering_text,
+)
 from repro.core import E4M3, E5M2, PER_BLOCK_128, MoRPolicy, mor_quantize
 from repro.core.formats import cast_to_format
 from repro.core.gam import scales_from_bmax
 from repro.core.metrics import E5M2_RANGE_RATIO
-from repro.core.mor import quantize_for_gemm
+from repro.core.mor import (
+    STAT_FRAC_NVFP4,
+    STAT_PAYLOAD_BPE,
+    quantize_for_gemm,
+)
 from repro.core.partition import Partition, from_blocks, to_blocks
 from repro.kernels import ref as kref
 from repro.kernels.ops import (
@@ -77,47 +87,9 @@ def _hlo_stats(fn, x, *args):
 
 
 def _tpu_kernel_launches(fn, x):
-    """Count fused-kernel launches in the TPU lowering of jit(fn).
-
-    Cross-lowered on CPU (no TPU needed): the Pallas path becomes a
-    single tpu_custom_call -- the whole sub-tensor selection is one
-    XLA-visible pass over the operand (plus the global-amax reduce).
-    """
-    txt = jax.jit(fn).trace(x).lower(lowering_platforms=("tpu",)).as_text()
-    return txt.count("tpu_custom_call")
-
-
-def _tpu_lowering_text(fn, *args):
-    return jax.jit(fn).trace(*args).lower(
-        lowering_platforms=("tpu",)
-    ).as_text()
-
-
-_TENSOR_DIMS_RE = re.compile(r"tensor<([0-9]+(?:x[0-9]+)*)x[a-z]")
-
-
-def _operand_sized_stablehlo(txt, shape):
-    """Operand-sized op count in a TPU cross-lowering (stablehlo): how
-    many non-custom-call ops still touch an operand-sized buffer -- the
-    'XLA pass' count of the pallas path. Counted by element product
-    (>= half the operand), so blocked 4-D views ((nm, nk, bm, bk)
-    reshapes/transposes of the old packer) and the packed-nibble lane
-    count too, whatever their rank."""
-    thresh = shape[0] * shape[1] // 2
-    n = 0
-    for ln in txt.splitlines():
-        if ("=" not in ln or "custom_call" in ln or "func" in ln
-                or "return" in ln):
-            continue
-        best = 0
-        for m in _TENSOR_DIMS_RE.finditer(ln):
-            p = 1
-            for d in m.group(1).split("x"):
-                p *= int(d)
-            best = max(best, p)
-        if best >= thresh:
-            n += 1
-    return n
+    """Fused-kernel launch count in the TPU cross-lowering of jit(fn)
+    (repro.analysis.hlo_rules; no TPU needed)."""
+    return count_custom_calls(tpu_lowering_text(fn, x))
 
 
 def _three_pass_sub3(x2d):
@@ -226,7 +198,7 @@ def _bench_nvfp4_gemm(rows, rng, smoke: bool):
     tag = f"{M}x{N}x{K}"
     rows.append(csv_row(
         f"kernel/gemm_nvfp4_xla_{tag}", us_f,
-        f"frac_nvfp4={float(stats[8]):.2f};"
+        f"frac_nvfp4={float(stats[STAT_FRAC_NVFP4]):.2f};"
         f"weight_bytes_per_elt={bpe:.3f};"
         f"us_legacy_dequant={us_l:.1f}",
     ))
@@ -369,26 +341,35 @@ def _bench_quantize_pack(rows, rng, smoke: bool):
                 return mo.payload_q, mo.payload_bf16
 
             try:
-                txt_f = _tpu_lowering_text(fused_pl, x)
-                launches = txt_f.count("tpu_custom_call")
-                ops_f = _operand_sized_stablehlo(txt_f, x.shape)
-                ops_sel = _operand_sized_stablehlo(
-                    _tpu_lowering_text(select_pl, x), x.shape
+                txt_f = tpu_lowering_text(fused_pl, x)
+                launches = count_custom_calls(txt_f)
+                ops_f = operand_sized_ops(txt_f, x.shape)
+                ops_sel = operand_sized_ops(
+                    tpu_lowering_text(select_pl, x), x.shape
                 )
-                ops_2 = _operand_sized_stablehlo(
-                    _tpu_lowering_text(two_pass_pl, x), x.shape
+                ops_2 = operand_sized_ops(
+                    tpu_lowering_text(two_pass_pl, x), x.shape
                 )
                 pack_ops = ops_f - ops_sel
-                # The acceptance contract: one fused launch, zero
+                # The acceptance pins live in the contract registry
+                # (repro.analysis.contracts): one fused launch, zero
                 # operand-sized XLA packing ops on top of selection.
-                assert launches == 1, (recipe, mkn, launches)
-                assert pack_ops <= 0, (recipe, mkn, pack_ops, ops_f,
-                                       ops_sel)
+                lo, hi = contracts.SINGLE_LAUNCH
+                if not lo <= launches <= hi:
+                    raise AssertionError(
+                        f"quantize_pack {recipe} {mkn}: {launches} "
+                        f"launches outside {contracts.SINGLE_LAUNCH}"
+                    )
+                if pack_ops > contracts.MAX_PACK_OPS_OVER_SELECT:
+                    raise AssertionError(
+                        f"quantize_pack {recipe} {mkn}: {pack_ops} "
+                        "operand-sized packing op(s) over bare "
+                        "selection (max "
+                        f"{contracts.MAX_PACK_OPS_OVER_SELECT})"
+                    )
                 pack_ops = max(pack_ops, 0)
                 twopass_pack_ops = ops_2 - ops_sel
-            except Exception as e:  # older jax: no cross-lowering
-                if isinstance(e, AssertionError):
-                    raise
+            except CrossLoweringUnavailable:  # older jax
                 launches, pack_ops, twopass_pack_ops = -1, -1, -1
             # No wall "speedup" field on purpose: on the xla backend
             # the fused entry point IS the two-pass reference, so the
@@ -501,7 +482,8 @@ def _bench_optim_state(rows, rng, smoke: bool):
         f = jax.jit(event)
         us = _time(f, g, ef, iters=iters)
         _, _, stats = f(g, ef)
-        bpe = 1.0 if stats is None else float(stats["w"][11])
+        bpe = (1.0 if stats is None
+               else float(stats["w"][STAT_PAYLOAD_BPE]))
         rows.append(csv_row(
             f"kernel/grad_compress_{mode}_{n}x{n}", us,
             f"payload_bpe={bpe:.3f};"
@@ -527,8 +509,8 @@ def _bench_optim_state(rows, rng, smoke: bool):
         rows.append(csv_row(
             f"kernel/optim_moments_{tier}_1024x1024", us,
             f"moment_bytes_per_param_milli={milli};"
-            f"payload_bpe={float(pm.stats[11]):.3f};"
-            f"frac_nvfp4={float(pm.stats[8]):.2f}",
+            f"payload_bpe={float(pm.stats[STAT_PAYLOAD_BPE]):.3f};"
+            f"frac_nvfp4={float(pm.stats[STAT_FRAC_NVFP4]):.2f}",
         ))
 
 
@@ -776,10 +758,32 @@ def main(smoke: bool = False, sharded: bool = True,
 
     bench_serve(rows, smoke=smoke)
 
+    # Structural-contract sweep (the v5 schema row): every registered
+    # entry-point contract in repro.analysis.contracts, evaluated
+    # here so the artifact pins how many invariants the bench vouched
+    # for -- compare.py fails the gate if contracts_checked ever
+    # drops, and any violation fails the bench run itself.
+    _bench_analysis_contracts(rows)
+
     # Multi-device sharded lane (possibly via a forced-device child).
     if sharded:
         _bench_sharded(rows, smoke)
     return rows, None
+
+
+def _bench_analysis_contracts(rows):
+    summary = contracts.check_all()
+    if not summary.ok:
+        raise AssertionError(
+            "structural contract violation(s):\n"
+            + "\n".join(summary.violations)
+        )
+    rows.append(csv_row(
+        "kernel/analysis_contracts", 0.0,
+        f"contracts_checked={summary.contracts_checked};"
+        f"contract_rules_evaluated={summary.rules_evaluated};"
+        f"contract_violations={len(summary.violations)}",
+    ))
 
 
 if __name__ == "__main__":

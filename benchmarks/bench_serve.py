@@ -46,6 +46,7 @@ import time
 import jax
 import numpy as np
 
+from repro.analysis import contracts
 from repro.configs import get_config, reduced
 from repro.core import TENSOR_MOR, MoRPolicy
 from repro.kernels import ops as kops
@@ -117,10 +118,12 @@ def bench_serve(rows, smoke: bool = False):
         f"requests={len(reqs)};tok_per_s={tokens / wall:.1f}",
     ))
 
-    # Skinny-M contract: slots=4 -> 16-row activation blocks, and the
+    # Skinny-M contract: slots=4 -> 16-row activation blocks (the
+    # DECODE_ROW_BLOCK pin in repro.analysis.contracts), and the
     # decode-shaped grids actually landed in the autotune table.
     rb = eng.decode_row_block
-    assert rb == kops.decode_row_block(scfg.slots) == 16 < 128, (
+    assert rb == kops.decode_row_block(scfg.slots) \
+        == contracts.DECODE_ROW_BLOCK < 128, (
         f"decode row block {rb}: decode lane is padding the slots axis"
     )
     decode_grids = [g for g in kops._GEMM_TILE_TABLE

@@ -22,7 +22,11 @@ regression are flagged:
 * **counts** -- any *structural* counter in the ``derived`` field that
   grew: operand pass counts and fused-launch counts are deterministic
   properties of the lowering, so *any* increase is a real regression
-  (threshold 0). Counter keys: {counter_keys}.
+  (threshold 0). Counter keys: {counter_keys}. A second key set gates
+  the opposite direction -- coverage counters that may only grow
+  ({min_counter_keys}): a *decrease* means a registered structural
+  contract or rule silently vanished, which is flagged exactly like a
+  dropped row.
 
 Rows present only in the baseline are flagged as **missing** (a lane
 silently disappearing is how perf coverage rots); rows only in the
@@ -69,6 +73,17 @@ COUNTER_KEYS = (
     # the pack layout for the lane's fixed-seed data, so any growth
     # means the moment store re-inflated.
     "moment_bytes_per_param_milli",
+    # Static-analysis lane (kernel/analysis_contracts): the registry
+    # sweep must stay violation-free, so any growth past 0 is red.
+    "contract_violations",
+)
+
+# Coverage counters with the opposite gate direction: a DECREASE is the
+# regression (a structural contract or one of its rules was dropped
+# from the registry without anyone noticing), growth is just a note.
+MIN_COUNTER_KEYS = (
+    "contracts_checked",
+    "contract_rules_evaluated",
 )
 
 # Name fragments of lanes whose wall clock is interpreter- or
@@ -76,9 +91,15 @@ COUNTER_KEYS = (
 # unless --time-all.
 TIME_EXEMPT_FRAGMENTS = ("_interp", "_sharded", "serve_trace")
 
-__doc__ = __doc__.format(counter_keys=", ".join(COUNTER_KEYS))
+__doc__ = __doc__.format(
+    counter_keys=", ".join(COUNTER_KEYS),
+    min_counter_keys=", ".join(MIN_COUNTER_KEYS),
+)
 
-__all__ = ["COUNTER_KEYS", "parse_derived", "compare_artifacts", "main"]
+__all__ = [
+    "COUNTER_KEYS", "MIN_COUNTER_KEYS", "parse_derived",
+    "compare_artifacts", "main",
+]
 
 
 def parse_derived(derived: str) -> Dict[str, str]:
@@ -101,7 +122,7 @@ def _load(path: str) -> Dict[str, Any]:
 def _int_counters(derived: str) -> Dict[str, int]:
     out = {}
     for key, val in parse_derived(derived).items():
-        if key not in COUNTER_KEYS:
+        if key not in COUNTER_KEYS and key not in MIN_COUNTER_KEYS:
             continue
         try:
             out[key] = int(float(val))
@@ -146,12 +167,25 @@ def compare_artifacts(
         for key in sorted(set(bc) & set(cc)):
             if bc[key] < 0 or cc[key] < 0:
                 continue  # -1 sentinel: lane unavailable on that host
-            if cc[key] > bc[key]:
+            grew, shrank = cc[key] > bc[key], cc[key] < bc[key]
+            if key in MIN_COUNTER_KEYS:
+                if shrank:
+                    regressions.append(
+                        f"COVERAGE {name}: {key} {cc[key]} vs baseline "
+                        f"{bc[key]} (structural coverage shrank)"
+                    )
+                elif grew:
+                    notes.append(
+                        f"grew     {name}: {key} {cc[key]} vs baseline "
+                        f"{bc[key]}"
+                    )
+                continue
+            if grew:
                 regressions.append(
                     f"COUNT    {name}: {key} {cc[key]} vs baseline "
                     f"{bc[key]}"
                 )
-            elif cc[key] < bc[key]:
+            elif shrank:
                 notes.append(
                     f"improved {name}: {key} {cc[key]} vs baseline "
                     f"{bc[key]}"

@@ -7,11 +7,11 @@ slow lane runs ``python -m benchmarks.schema bench_kernels.json`` after
 the bench smoke, so a drifting producer fails the build instead of
 silently breaking downstream consumers.
 
-Schema ``repro.bench_kernels/v4`` (current; the validator also accepts
-``v1``/``v2``/``v3`` artifacts so stored history keeps validating)::
+Schema ``repro.bench_kernels/v5`` (current; the validator also accepts
+``v1``..``v4`` artifacts so stored history keeps validating)::
 
     {
-      "schema": "repro.bench_kernels/v4",
+      "schema": "repro.bench_kernels/v5",
       "rows": [
         {"name": "kernel/<lane>_<variant>[_<size>]",   # row id
          "us":   12.3,                                  # mean wall us/call
@@ -32,8 +32,16 @@ producers must emit the compressed training-state rows --
 events) and ``kernel/optim_moments_<tier>_*`` rows whose ``derived``
 carries the ``moment_bytes_per_param_milli`` HBM budget counter
 (physical bytes/param of the packed Adam moment, in milli-bytes;
-compare.py gates it at threshold 0). Row grammar is unchanged across
-all versions:
+compare.py gates it at threshold 0). v5 (additive): the smoke emits a
+``kernel/analysis_contracts`` row whose ``derived`` carries
+``contracts_checked`` / ``contract_rules_evaluated`` /
+``contract_violations`` from the structural contract registry
+(``repro.analysis.contracts``, docs/analysis.md). ``compare.py`` gates
+all three: violations may not grow past 0, and -- via its
+``MIN_COUNTER_KEYS`` direction -- the checked/evaluated counts may not
+*shrink*, so silently dropping a registered contract fails the gate
+the same way dropping a bench row does. Row grammar is unchanged
+across all versions:
 
 * ``name`` matches ``^kernel/[A-Za-z0-9._-]+$`` and is unique per
   artifact.
@@ -57,13 +65,16 @@ SCHEMA_V1 = "repro.bench_kernels/v1"
 SCHEMA_V2 = "repro.bench_kernels/v2"
 SCHEMA_V3 = "repro.bench_kernels/v3"
 SCHEMA_V4 = "repro.bench_kernels/v4"
-SCHEMA = SCHEMA_V4
-ACCEPTED_SCHEMAS = (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4)
+SCHEMA_V5 = "repro.bench_kernels/v5"
+SCHEMA = SCHEMA_V5
+ACCEPTED_SCHEMAS = (
+    SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4, SCHEMA_V5
+)
 _NAME_RE = re.compile(r"^kernel/[A-Za-z0-9._-]+$")
 
 __all__ = [
     "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "SCHEMA_V3", "SCHEMA_V4",
-    "ACCEPTED_SCHEMAS",
+    "SCHEMA_V5", "ACCEPTED_SCHEMAS",
     "make_artifact", "validate_artifact", "rows_from_csv",
 ]
 
@@ -84,7 +95,7 @@ def make_artifact(csv_rows: List[str]) -> Dict[str, Any]:
 
 def validate_artifact(doc: Any) -> None:
     """Raise ValueError unless ``doc`` conforms to an accepted schema
-    version (v1..v4 -- the row grammar is shared)."""
+    version (v1..v5 -- the row grammar is shared)."""
     if not isinstance(doc, dict):
         raise ValueError(f"artifact must be an object, got {type(doc)}")
     extra = set(doc) - {"schema", "rows"}

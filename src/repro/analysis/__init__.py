@@ -1,0 +1,70 @@
+"""Precision-flow static analysis for the MoR repro.
+
+Three layers behind one registry (docs/analysis.md):
+
+- :mod:`repro.analysis.contracts` -- declarative structural contracts
+  for the hot entry points (launch counts, forbidden op families,
+  donation, accumulation dtypes), evaluated over jaxprs and lowered
+  HLO. The single source of the repo's structural acceptance literals.
+- :mod:`repro.analysis.jaxpr_lint` -- payload-lane taint checker: MoR
+  packed lanes may only be consumed by sanctioned kernel calls and
+  whitelisted decode sites.
+- :mod:`repro.analysis.ast_rules` -- stdlib-only repo-convention
+  linter (MOR001..MOR005), runnable without jax via
+  ``tools/lint_repro.py``.
+
+``hlo_rules`` holds the shared lowering-text helpers the tests and
+benches previously each carried a private copy of.
+"""
+from repro.analysis import ast_rules, hlo_rules
+from repro.analysis.contracts import (
+    DECODE_ROW_BLOCK,
+    MAX_PACK_OPS_OVER_SELECT,
+    MOR_DOT_FWD_LAUNCHES,
+    MOR_DOT_GRAD_LAUNCHES,
+    REGISTRY,
+    SINGLE_LAUNCH,
+    AnalysisSummary,
+    Contract,
+    ContractCase,
+    ContractReport,
+    assert_contract,
+    check,
+    check_all,
+    check_contract,
+    engine_decode_report,
+    get,
+    register,
+)
+from repro.analysis.jaxpr_lint import (
+    PAYLOAD_LANE_REGEX,
+    TaintReport,
+    TaintViolation,
+    lint_payload_flow,
+)
+
+__all__ = [
+    "ast_rules",
+    "hlo_rules",
+    "DECODE_ROW_BLOCK",
+    "MAX_PACK_OPS_OVER_SELECT",
+    "MOR_DOT_FWD_LAUNCHES",
+    "MOR_DOT_GRAD_LAUNCHES",
+    "REGISTRY",
+    "SINGLE_LAUNCH",
+    "AnalysisSummary",
+    "Contract",
+    "ContractCase",
+    "ContractReport",
+    "assert_contract",
+    "check",
+    "check_all",
+    "check_contract",
+    "engine_decode_report",
+    "get",
+    "register",
+    "PAYLOAD_LANE_REGEX",
+    "TaintReport",
+    "TaintViolation",
+    "lint_payload_flow",
+]

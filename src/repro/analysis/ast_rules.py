@@ -1,0 +1,362 @@
+"""Repo-convention AST lint rules.
+
+Every rule encodes a bug class this repo actually shipped (the table in
+``docs/analysis.md`` maps each rule to the PR that fixed the original):
+
+=======  ==============================================================
+MOR001   builtin ``hash()`` anywhere under ``src/`` -- str hashing is
+         salted per process (PYTHONHASHSEED), so hash-derived values
+         (e.g. per-tensor init seeds) differ run to run. PR 8 shipped
+         and then fixed exactly this in ``models/transformer.py``
+         (``zlib.crc32`` is the stable replacement).
+MOR002   bare ``assert`` used for user-facing validation in non-kernel
+         ``src/`` modules -- asserts vanish under ``python -O`` and
+         crash with context-free tracebacks; PR 7 converted the flash
+         launcher's asserts to typed ``ValueError``s after exactly
+         such a crash. Kernel bodies (``src/repro/kernels/``) are
+         exempt: in-kernel asserts are compile-time shape checks on
+         the traced path, not user-facing validation. ``tests/`` and
+         ``benchmarks/`` are out of scope entirely -- there the bare
+         assert is the pytest reporting idiom.
+MOR003   magic-integer indexing into a MoR stats row (``stats[11]``,
+         ``row[5]``, ``stats.at[10]``) instead of the named
+         ``STAT_*`` lane constants in :mod:`repro.core.mor` -- the
+         STATS_WIDTH v1->v2->v3 migrations re-numbered lanes twice
+         and every literal index was a silent corruption hazard.
+MOR004   import-time ``jax.config.update(...)`` -- module import order
+         silently decides global numerics (x64, default matmul
+         precision) for every other module in the process.
+MOR005   wall-clock (``time.time``/``perf_counter``/``monotonic``) or
+         host RNG (``random.*``, ``np.random.*``) calls inside a
+         jit-compiled function -- they execute once at trace time and
+         freeze into the compiled program, so the "timestamp" or
+         "random" value is a constant across every call.
+=======  ==============================================================
+
+Stdlib-only on purpose: ``tools/lint_repro.py`` runs the AST pass
+without jax installed. Suppression: a trailing ``# lint: allow(MORxxx)
+reason`` comment on the offending line, or a central
+:data:`ALLOWLIST` entry carrying the rationale (the auditable path --
+prefer it for anything longer-lived than a test fixture).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "RULES",
+    "ALLOWLIST",
+    "AllowEntry",
+    "LintViolation",
+    "lint_source",
+    "lint_file",
+    "lint_paths",
+]
+
+RULES = {
+    "MOR001": "builtin hash() is PYTHONHASHSEED-salted; use zlib.crc32",
+    "MOR002": "bare assert for validation in non-kernel src module; "
+              "raise a typed exception",
+    "MOR003": "magic integer index into a stats row; use the STAT_* "
+              "lane constants (repro.core.mor)",
+    "MOR004": "import-time jax.config mutation; configure inside an "
+              "entry point",
+    "MOR005": "wall-clock/host-RNG call inside jitted code; it freezes "
+              "at trace time",
+}
+
+# Path fragments exempt from MOR002: kernel bodies assert traced-shape
+# invariants at compile time (pallas BlockSpec plumbing), which is the
+# one place an assert is the right tool.
+KERNEL_PATH_FRAGMENT = "repro/kernels/"
+
+# MOR002 only covers library code: in tests/ and benchmarks/ the bare
+# assert IS the reporting idiom (pytest rewrites them into rich
+# failure messages). Lint fixtures with no real path ("<string>") are
+# treated as library code so the rule is testable.
+_MOR002_SCOPE = "src/"
+
+_INLINE_ALLOW = "# lint: allow("
+
+
+@dataclasses.dataclass(frozen=True)
+class AllowEntry:
+    """One audited suppression: *why* a rule does not apply somewhere.
+
+    ``line_contains`` of ``None`` matches the whole file (rare; prefer
+    a line anchor). The rationale is mandatory and shows up in
+    ``--list-rules`` output so the allowlist stays reviewable.
+    """
+
+    rule: str
+    path_fragment: str
+    line_contains: Optional[str]
+    rationale: str
+
+
+ALLOWLIST: Tuple[AllowEntry, ...] = (
+    # PR 7/8 post-mortem residue, kept on the books deliberately: the
+    # one *known remaining* PYTHONHASHSEED sensitivity in this repo is
+    # not a hash() call (MOR001 bans those outright) but a cross-trace
+    # XLA reassociation coin flip -- two separately-jitted programs of
+    # the same math may reassociate reductions differently depending
+    # on trace-time dict ordering, so the serving-vs-sequential parity
+    # test carries a 5e-3 tolerance instead of bit-equality. Pinned and
+    # explained in tests/test_serve_engine.py (test_engine_matches_
+    # sequential_reference's tolerance comment) and docs/analysis.md;
+    # recorded here so the lint's "no seed-unstable constructs" claim
+    # is honest about its scope.
+    AllowEntry(
+        rule="MOR001",
+        path_fragment="tests/test_serve_engine.py",
+        line_contains=None,
+        rationale="documented PYTHONHASHSEED-dependent cross-trace XLA "
+                  "reassociation tolerance (not a hash() call); see "
+                  "docs/analysis.md#allowlist",
+    ),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _is_name(node: ast.AST, name: str) -> bool:
+    return isinstance(node, ast.Name) and node.id == name
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.config.update' for Attribute chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _int_index(sub: ast.Subscript) -> Optional[int]:
+    sl = sub.slice
+    if isinstance(sl, ast.Constant) and isinstance(sl.value, int) \
+            and not isinstance(sl.value, bool):
+        return sl.value
+    if (isinstance(sl, ast.UnaryOp) and isinstance(sl.op, ast.USub)
+            and isinstance(sl.operand, ast.Constant)
+            and isinstance(sl.operand.value, int)):
+        return -sl.operand.value
+    return None
+
+
+_STATS_ROW_NAMES = ("row",)
+
+
+def _looks_like_stats_row(value: ast.AST) -> bool:
+    """The subscripted expression names a stats row: a terminal
+    identifier containing 'stats' (``stats``, ``pm.stats``,
+    ``stats.at``) or the conventional per-row loop name ``row``."""
+    if isinstance(value, ast.Attribute) and value.attr == "at":
+        # stats.at[10].set(...) -- look through the .at accessor.
+        value = value.value
+    if isinstance(value, ast.Name):
+        return "stats" in value.id or value.id in _STATS_ROW_NAMES
+    if isinstance(value, ast.Attribute):
+        return "stats" in value.attr
+    return False
+
+
+_CLOCK_CALLS = {
+    "time.time", "time.perf_counter", "time.monotonic", "time.time_ns",
+}
+_HOST_RNG_PREFIXES = ("random.", "np.random.", "numpy.random.")
+
+
+def _jit_call_target(call: ast.Call) -> Optional[str]:
+    """Name of the function being jitted in ``jax.jit(f, ...)`` /
+    ``jit(f)`` / ``partial(jax.jit, ...)(f)`` call sites, if static."""
+    dotted = _dotted(call.func)
+    if dotted not in ("jax.jit", "jit"):
+        return None
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    return None
+
+
+def _has_jit_decorator(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", ()):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if _dotted(target) in ("jax.jit", "jit"):
+            return True
+        if isinstance(dec, ast.Call) and _dotted(dec.func) in (
+            "functools.partial", "partial"
+        ):
+            if any(_dotted(a) in ("jax.jit", "jit") for a in dec.args):
+                return True
+    return False
+
+
+def _function_depth_map(tree: ast.Module):
+    """Yield (node, depth) with depth = number of enclosing defs."""
+    stack: List[Tuple[ast.AST, int]] = [(tree, 0)]
+    while stack:
+        node, depth = stack.pop()
+        yield node, depth
+        bump = isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+        )
+        for child in ast.iter_child_nodes(node):
+            stack.append((child, depth + (1 if bump else 0)))
+
+
+def _rule_hash(tree, path, out):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_name(node.func, "hash"):
+            out.append(LintViolation(
+                "MOR001", path, node.lineno, RULES["MOR001"]
+            ))
+
+
+def _rule_bare_assert(tree, path, out):
+    norm = path.replace("\\", "/")
+    if KERNEL_PATH_FRAGMENT in norm:
+        return
+    if _MOR002_SCOPE not in norm and norm != "<string>":
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            out.append(LintViolation(
+                "MOR002", path, node.lineno, RULES["MOR002"]
+            ))
+
+
+def _rule_stats_magic_index(tree, path, out):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Subscript):
+            continue
+        if _int_index(node) is None:
+            continue
+        if _looks_like_stats_row(node.value):
+            out.append(LintViolation(
+                "MOR003", path, node.lineno,
+                RULES["MOR003"] + f" (index {_int_index(node)})",
+            ))
+
+
+def _rule_import_time_config(tree, path, out):
+    for node, depth in _function_depth_map(tree):
+        if depth > 0 or not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func)
+        if dotted.endswith("config.update") or dotted in (
+            "jax.config.enable_x64", "config.enable_x64"
+        ):
+            out.append(LintViolation(
+                "MOR004", path, node.lineno, RULES["MOR004"]
+            ))
+
+
+def _rule_clock_in_jit(tree, path, out):
+    jitted = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            target = _jit_call_target(node)
+            if target:
+                jitted.add(target)
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name not in jitted and not _has_jit_decorator(node):
+            continue
+        for inner in ast.walk(node):
+            if not isinstance(inner, ast.Call):
+                continue
+            dotted = _dotted(inner.func)
+            if dotted in _CLOCK_CALLS or any(
+                dotted.startswith(p) for p in _HOST_RNG_PREFIXES
+            ):
+                out.append(LintViolation(
+                    "MOR005", path, inner.lineno,
+                    RULES["MOR005"] + f" ({dotted} in {node.name})",
+                ))
+
+
+_ALL_RULES = (
+    _rule_hash,
+    _rule_bare_assert,
+    _rule_stats_magic_index,
+    _rule_import_time_config,
+    _rule_clock_in_jit,
+)
+
+
+def _inline_allowed(violation: LintViolation, lines: Sequence[str]) -> bool:
+    if not 1 <= violation.line <= len(lines):
+        return False
+    ln = lines[violation.line - 1]
+    idx = ln.find(_INLINE_ALLOW)
+    if idx < 0:
+        return False
+    return violation.rule in ln[idx + len(_INLINE_ALLOW):]
+
+
+def _central_allowed(violation: LintViolation, lines: Sequence[str]) -> bool:
+    path = violation.path.replace("\\", "/")
+    for entry in ALLOWLIST:
+        if entry.rule != violation.rule:
+            continue
+        if entry.path_fragment not in path:
+            continue
+        if entry.line_contains is None:
+            return True
+        if 1 <= violation.line <= len(lines) and \
+                entry.line_contains in lines[violation.line - 1]:
+            return True
+    return False
+
+
+def lint_source(src: str, path: str = "<string>") -> List[LintViolation]:
+    """Run every rule over one module's source text; allowlist applied."""
+    tree = ast.parse(src, filename=path)
+    raw: List[LintViolation] = []
+    for rule in _ALL_RULES:
+        rule(tree, path, raw)
+    lines = src.splitlines()
+    return sorted(
+        (
+            v for v in raw
+            if not _inline_allowed(v, lines)
+            and not _central_allowed(v, lines)
+        ),
+        key=lambda v: (v.path, v.line, v.rule),
+    )
+
+
+def lint_file(path: str) -> List[LintViolation]:
+    with open(path, encoding="utf-8") as f:
+        return lint_source(f.read(), path)
+
+
+def lint_paths(paths: Iterable[str]) -> List[LintViolation]:
+    """Lint every ``.py`` file under the given files/directories."""
+    import os
+
+    out: List[LintViolation] = []
+    for root in paths:
+        if os.path.isfile(root):
+            out.extend(lint_file(root))
+            continue
+        for dirpath, _dirnames, filenames in os.walk(root):
+            for fname in sorted(filenames):
+                if fname.endswith(".py"):
+                    out.extend(lint_file(os.path.join(dirpath, fname)))
+    return out

@@ -22,6 +22,18 @@ from .mor import (
     EVENT_GRAD,
     EVENT_MOMENT_M,
     EVENT_MOMENT_V,
+    STAT_AMAX,
+    STAT_DECISION,
+    STAT_EVENT_KIND,
+    STAT_FRAC_BF16,
+    STAT_FRAC_E4M3,
+    STAT_FRAC_E5M2,
+    STAT_FRAC_NVFP4,
+    STAT_GROUP_MANTISSA,
+    STAT_MICRO_SCALE_BPE,
+    STAT_NONZERO_FRAC,
+    STAT_PAYLOAD_BPE,
+    STAT_REL_ERR,
     STATS_WIDTH,
     mor_quantize,
     partition_of,
@@ -59,6 +71,10 @@ __all__ = [
     "block_dynamic_range_ok", "block_relative_error_sums", "relative_error",
     "STATS_WIDTH", "mor_quantize", "partition_of", "quant_dequant",
     "quantize_for_gemm",
+    "STAT_DECISION", "STAT_REL_ERR", "STAT_AMAX", "STAT_FRAC_E4M3",
+    "STAT_FRAC_E5M2", "STAT_FRAC_BF16", "STAT_NONZERO_FRAC",
+    "STAT_GROUP_MANTISSA", "STAT_FRAC_NVFP4", "STAT_MICRO_SCALE_BPE",
+    "STAT_EVENT_KIND", "STAT_PAYLOAD_BPE",
     "EVENT_GEMM", "EVENT_GRAD", "EVENT_MOMENT_M", "EVENT_MOMENT_V",
     "PER_BLOCK_64", "PER_BLOCK_128", "PER_CHANNEL", "PER_TENSOR",
     "SUB_CHANNEL_128", "Partition", "block_amax",

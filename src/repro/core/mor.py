@@ -83,6 +83,18 @@ from repro.kernels.ref import TAG_BF16, TAG_E4M3, TAG_NVFP4, MixedOperand
 
 __all__ = [
     "STATS_WIDTH",
+    "STAT_DECISION",
+    "STAT_REL_ERR",
+    "STAT_AMAX",
+    "STAT_FRAC_E4M3",
+    "STAT_FRAC_E5M2",
+    "STAT_FRAC_BF16",
+    "STAT_NONZERO_FRAC",
+    "STAT_GROUP_MANTISSA",
+    "STAT_FRAC_NVFP4",
+    "STAT_MICRO_SCALE_BPE",
+    "STAT_EVENT_KIND",
+    "STAT_PAYLOAD_BPE",
     "EVENT_GEMM",
     "EVENT_GRAD",
     "EVENT_MOMENT_M",
@@ -95,6 +107,23 @@ __all__ = [
 ]
 
 STATS_WIDTH = 12
+
+# Named lane indices of the layout-v3 stats row documented above. All
+# stats-row consumers index through these -- the v1->v2->v3 migrations
+# re-numbered lanes twice, and the MOR003 lint rule
+# (repro.analysis.ast_rules) rejects new literal-index sites.
+STAT_DECISION = 0
+STAT_REL_ERR = 1
+STAT_AMAX = 2
+STAT_FRAC_E4M3 = 3
+STAT_FRAC_E5M2 = 4
+STAT_FRAC_BF16 = 5
+STAT_NONZERO_FRAC = 6
+STAT_GROUP_MANTISSA = 7
+STAT_FRAC_NVFP4 = 8
+STAT_MICRO_SCALE_BPE = 9
+STAT_EVENT_KIND = 10
+STAT_PAYLOAD_BPE = 11
 
 # Stats lane [10] (event_kind) values. GEMM operand events are emitted
 # by this module; the optimizer layer (repro.optim) stamps its rows so
@@ -404,12 +433,12 @@ def quantize_for_gemm(
         )
         return mo, _sub_tensor_stats(r, policy, x2d.size)
     _, stats, tags = _decide(x2d, policy)
-    # stats[2] is the group amax the decision path used -- already
-    # allreduced under mesh_axes -- so the pack's Alg. 1 scales can
-    # never disagree with the decisions in `tags`.
+    # The decision path's group amax -- already allreduced under
+    # mesh_axes -- so the pack's Alg. 1 scales can never disagree with
+    # the decisions in `tags`.
     mo = _kref.pack_mixed(
         x2d, tags, block, policy.algo,
-        group_amax=stats[2],
+        group_amax=stats[STAT_AMAX],
         with_nvfp4=(policy.recipe == "sub4"),
     )
     return mo, stats

@@ -92,7 +92,8 @@ def _pad2d(x: jnp.ndarray, bm: int, bk: int) -> jnp.ndarray:
 
 def to_blocks(x: jnp.ndarray, part: Partition) -> jnp.ndarray:
     """(M, K) -> (nm, nk, bm, bk) zero-padded block view."""
-    assert x.ndim == 2, f"to_blocks wants 2-D, got {x.shape}"
+    if x.ndim != 2:
+        raise ValueError(f"to_blocks wants 2-D, got {x.shape}")
     bm, bk = part.resolve(x.shape)
     xp = _pad2d(x, bm, bk)
     mp, kp = xp.shape

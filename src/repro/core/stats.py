@@ -18,6 +18,8 @@ from typing import Dict, List
 
 import numpy as np
 
+from repro.core.mor import STAT_DECISION, STAT_FRAC_BF16, STAT_REL_ERR
+
 __all__ = ["RelErrHistogram", "MoRStatsTracker"]
 
 # Bins: [0, .5%), [.5, 1%), ..., [5.5%, inf). Matches the paper's Fig. 11.
@@ -68,7 +70,7 @@ class MoRStatsTracker:
             arr = np.asarray(vec, dtype=np.float64)
             rows = arr.reshape(-1, arr.shape[-1])
             for i, row in enumerate(rows):
-                if row[0] < 0:
+                if row[STAT_DECISION] < 0:
                     # decision == -1: disabled-policy (recipe 'off')
                     # event -- its frac_bf16 = 1.0 is definitional, not
                     # a fallback decision; counting it would drag the
@@ -76,11 +78,14 @@ class MoRStatsTracker:
                     # quantized models.
                     continue
                 key = f"{name}[{i}]" if rows.shape[0] > 1 else name
-                self.hists.setdefault(key, RelErrHistogram()).add(float(row[1]))
+                self.hists.setdefault(key, RelErrHistogram()).add(
+                    float(row[STAT_REL_ERR])
+                )
                 self.total_events += 1
-                # decision==0 and recipe active => BF16 fallback. Row[5] is
-                # frac_bf16 which covers both tensor- and sub-tensor recipes.
-                self.fallback_events += float(row[5])
+                # decision==0 and recipe active => BF16 fallback; the
+                # frac_bf16 lane covers both tensor- and sub-tensor
+                # recipes.
+                self.fallback_events += float(row[STAT_FRAC_BF16])
 
     @property
     def bf16_fallback_pct(self) -> float:

@@ -39,7 +39,11 @@ class SyntheticLM:
     """step -> {'tokens': (B_local, S) i32, 'labels': (B_local, S) i32}."""
 
     def __init__(self, cfg: DataConfig):
-        assert cfg.global_batch % cfg.num_shards == 0
+        if cfg.global_batch % cfg.num_shards:
+            raise ValueError(
+                f"global_batch {cfg.global_batch} must divide evenly "
+                f"over {cfg.num_shards} shard(s)"
+            )
         self.cfg = cfg
         self.local_batch = cfg.global_batch // cfg.num_shards
         root = np.random.default_rng(cfg.seed)

@@ -149,7 +149,7 @@ class MorSelect(NamedTuple):
     nv_sums: jnp.ndarray | None = None
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass
 class MixedOperand:
     """One GEMM operand in the mixed-representation block layout.
@@ -222,6 +222,22 @@ class MixedOperand:
             (self.payload_q, self.payload_bf16, self.tags, self.scales,
              self.payload_nib, self.micro_scales),
             (self.block, self.shape, self.has_nvfp4),
+        )
+
+    def tree_flatten_with_keys(self):
+        # Same children, same order -- but with named key paths, so the
+        # payload-lane taint checker (repro.analysis.jaxpr_lint) can
+        # seed taint by lane name anywhere a MixedOperand rides in an
+        # argument tree.
+        children, aux = self.tree_flatten()
+        names = ("payload_q", "payload_bf16", "tags", "scales",
+                 "payload_nib", "micro_scales")
+        return (
+            tuple(
+                (jax.tree_util.GetAttrKey(n), c)
+                for n, c in zip(names, children)
+            ),
+            aux,
         )
 
     @classmethod

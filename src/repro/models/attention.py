@@ -434,22 +434,33 @@ def kv_stats_row(tags: jnp.ndarray) -> jnp.ndarray:
     never re-reads its operand to price the error. [10] (event_kind)
     stays 0 -- cache rows ride the GEMM-event channel.
     """
-    from repro.core.mor import STATS_WIDTH
+    from repro.core.mor import (
+        STAT_DECISION,
+        STAT_FRAC_BF16,
+        STAT_FRAC_E4M3,
+        STAT_FRAC_E5M2,
+        STAT_FRAC_NVFP4,
+        STAT_GROUP_MANTISSA,
+        STAT_MICRO_SCALE_BPE,
+        STAT_NONZERO_FRAC,
+        STAT_PAYLOAD_BPE,
+        STATS_WIDTH,
+    )
 
     t = jnp.asarray(tags).reshape(-1).astype(jnp.int32)
     n = t.size
     frac = lambda tag: jnp.mean((t == tag).astype(jnp.float32))
     f_nv = frac(TAG_NVFP4)
     row = jnp.zeros((STATS_WIDTH,), jnp.float32)
-    row = row.at[0].set(1.0)
-    row = row.at[3].set(frac(TAG_E4M3))
-    row = row.at[4].set(frac(TAG_E5M2))
-    row = row.at[5].set(frac(TAG_BF16))
-    row = row.at[6].set(float(n))
-    row = row.at[7].set(1.0)
-    row = row.at[8].set(f_nv)
-    row = row.at[9].set(f_nv / NVFP4_MICRO)
-    row = row.at[11].set(
+    row = row.at[STAT_DECISION].set(1.0)
+    row = row.at[STAT_FRAC_E4M3].set(frac(TAG_E4M3))
+    row = row.at[STAT_FRAC_E5M2].set(frac(TAG_E5M2))
+    row = row.at[STAT_FRAC_BF16].set(frac(TAG_BF16))
+    row = row.at[STAT_NONZERO_FRAC].set(float(n))
+    row = row.at[STAT_GROUP_MANTISSA].set(1.0)
+    row = row.at[STAT_FRAC_NVFP4].set(f_nv)
+    row = row.at[STAT_MICRO_SCALE_BPE].set(f_nv / NVFP4_MICRO)
+    row = row.at[STAT_PAYLOAD_BPE].set(
         frac(TAG_E4M3) + frac(TAG_E5M2) + 2.0 * frac(TAG_BF16)
         + (0.5 + 1.0 / NVFP4_MICRO) * f_nv
     )

@@ -47,7 +47,12 @@ import jax.numpy as jnp
 
 from repro.core.collectives import all_gather_over
 from repro.core.formats import E4M3
-from repro.core.mor import EVENT_GRAD, mor_quantize, quantize_for_gemm
+from repro.core.mor import (
+    EVENT_GRAD,
+    STAT_EVENT_KIND,
+    mor_quantize,
+    quantize_for_gemm,
+)
 from repro.core.policy import MoRPolicy
 from repro.kernels.ref import MixedOperand
 
@@ -102,7 +107,7 @@ def _mor_roundtrip(
     y2d, stats = mor_quantize(leaf2d(gf), policy)
     return (
         y2d.reshape(g.shape).astype(g.dtype),
-        stats.at[10].set(EVENT_GRAD),
+        stats.at[STAT_EVENT_KIND].set(EVENT_GRAD),
     )
 
 

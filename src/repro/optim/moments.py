@@ -41,6 +41,8 @@ import numpy as np
 from repro.core.mor import (
     EVENT_MOMENT_M,
     EVENT_MOMENT_V,
+    STAT_EVENT_KIND,
+    STAT_PAYLOAD_BPE,
     STATS_WIDTH,
     quantize_for_gemm,
 )
@@ -101,7 +103,7 @@ SUB4_V_MOMENTS = MomentPolicy(
 )
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass
 class PackedMoment:
     """One moment leaf in the mixed block layout.
@@ -117,6 +119,18 @@ class PackedMoment:
 
     def tree_flatten(self):
         return (self.mo, self.stats), (tuple(self.shape),)
+
+    def tree_flatten_with_keys(self):
+        # Named key paths so the payload-lane taint checker
+        # (repro.analysis.jaxpr_lint) sees .mo.payload_q etc. when an
+        # opt state rides in a traced argument tree.
+        return (
+            (
+                (jax.tree_util.GetAttrKey("mo"), self.mo),
+                (jax.tree_util.GetAttrKey("stats"), self.stats),
+            ),
+            (tuple(self.shape),),
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -140,7 +154,8 @@ def encode_moment(
     x2d = leaf2d(x).astype(jnp.bfloat16)
     mo, stats = quantize_for_gemm(x2d, policy)
     return PackedMoment(
-        mo=mo, stats=stats.at[10].set(kind), shape=tuple(x.shape)
+        mo=mo, stats=stats.at[STAT_EVENT_KIND].set(kind),
+        shape=tuple(x.shape)
     )
 
 
@@ -182,9 +197,12 @@ def block_overhead_bpe(mo: MixedOperand) -> float:
 
 def logical_bytes_per_param(pm: PackedMoment) -> jnp.ndarray:
     """Payload bytes/param implied by the encode event's tag mixture
-    (stats lane [11]) plus the static block metadata overhead.
-    Traceable -- this is the in-jit budget the train step reports."""
-    return pm.stats[11] + jnp.float32(block_overhead_bpe(pm.mo))
+    (the payload_bpe stats lane) plus the static block metadata
+    overhead. Traceable -- this is the in-jit budget the train step
+    reports."""
+    return pm.stats[STAT_PAYLOAD_BPE] + jnp.float32(
+        block_overhead_bpe(pm.mo)
+    )
 
 
 def physical_bytes_per_param(pm: PackedMoment) -> float:

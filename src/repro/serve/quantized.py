@@ -44,7 +44,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import MoRPolicy
-from repro.core.mor import quantize_for_gemm
+from repro.core.mor import (
+    STAT_FRAC_BF16,
+    STAT_FRAC_E4M3,
+    STAT_FRAC_E5M2,
+    STAT_FRAC_NVFP4,
+    STAT_REL_ERR,
+    quantize_for_gemm,
+)
 from repro.kernels import ops as kops
 from repro.kernels.ref import TAG_BF16, MixedOperand
 
@@ -57,7 +64,7 @@ __all__ = [
 ]
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 @dataclasses.dataclass
 class QTensor:
     """A real-quantized weight: per-block mixed-representation storage.
@@ -93,6 +100,18 @@ class QTensor:
 
     def tree_flatten(self):
         return ((self.mo, self.stats), (self.shape,))
+
+    def tree_flatten_with_keys(self):
+        # Named key paths for the payload-lane taint checker
+        # (repro.analysis.jaxpr_lint): lanes show up as .mo.payload_q
+        # etc. in flattened argument paths.
+        return (
+            (
+                (jax.tree_util.GetAttrKey("mo"), self.mo),
+                (jax.tree_util.GetAttrKey("stats"), self.stats),
+            ),
+            (self.shape,),
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -174,7 +193,10 @@ def quantize_weight(
     policy as an all-BF16 passthrough pack). Host-side, ahead of
     serving. Returns the QTensor plus decision stats.
     """
-    assert w.ndim == 2
+    if w.ndim != 2:
+        raise ValueError(
+            f"quantize_weight wants a 2-D weight, got {w.shape}"
+        )
     pol = policy if policy.partition == "block" else policy.replace(
         partition="block"
     )
@@ -182,12 +204,12 @@ def quantize_weight(
     qt = QTensor(mo.compact(), stats, tuple(w.shape))
     s = np.asarray(stats)
     return qt, {
-        "rel_err": float(s[1]),
+        "rel_err": float(s[STAT_REL_ERR]),
         "quantized": float(qt.frac_quantized > 0),
-        "frac_e4m3": float(s[3]),
-        "frac_e5m2": float(s[4]),
-        "frac_bf16": float(s[5]),
-        "frac_nvfp4": float(s[8]),
+        "frac_e4m3": float(s[STAT_FRAC_E4M3]),
+        "frac_e5m2": float(s[STAT_FRAC_E5M2]),
+        "frac_bf16": float(s[STAT_FRAC_BF16]),
+        "frac_nvfp4": float(s[STAT_FRAC_NVFP4]),
     }
 
 
@@ -201,7 +223,11 @@ def quantize_weight_stacked(
     ``lax.scan`` over the block stack slices per layer, so the scanned
     model body sees ordinary 2-D QTensors.
     """
-    assert w3.ndim == 3
+    if w3.ndim != 3:
+        raise ValueError(
+            "quantize_weight_stacked wants a layer-stacked (L, K, N) "
+            f"weight, got {w3.shape}"
+        )
     pol = policy if policy.partition == "block" else policy.replace(
         partition="block"
     )

@@ -25,7 +25,14 @@ import numpy as np
 
 from repro.checkpoint.ckpt import Checkpointer, latest_step
 from repro.configs.base import ArchConfig
-from repro.core import STATS_WIDTH, MoRDotPolicy, MoRStatsTracker
+from repro.core import (
+    STAT_FRAC_BF16,
+    STAT_GROUP_MANTISSA,
+    STAT_REL_ERR,
+    STATS_WIDTH,
+    MoRDotPolicy,
+    MoRStatsTracker,
+)
 from repro.data.pipeline import DataConfig, SyntheticLM, prefetch
 from repro.models import init_params
 from repro.optim.adamw import init_opt_state
@@ -123,9 +130,11 @@ class Trainer:
                  "bwd_bf16": float(metrics.get("bwd_frac_bf16", 0.0))}
             )
             row = np.zeros(STATS_WIDTH, np.float64)
-            row[1] = float(metrics.get("fwd_rel_err", 0.0))
-            row[5] = float(metrics.get("fwd_frac_bf16", 0.0))
-            row[7] = 1.0
+            row[STAT_REL_ERR] = float(metrics.get("fwd_rel_err", 0.0))
+            row[STAT_FRAC_BF16] = float(
+                metrics.get("fwd_frac_bf16", 0.0)
+            )
+            row[STAT_GROUP_MANTISSA] = 1.0
             self.tracker.update({"global": row}, step)
             if self.ckpt and (
                 (step + 1) % self.run_cfg.ckpt_every == 0 or self._preempted

@@ -7,6 +7,7 @@ import pytest
 
 from benchmarks.compare import (
     COUNTER_KEYS,
+    MIN_COUNTER_KEYS,
     compare_artifacts,
     main,
     parse_derived,
@@ -118,8 +119,39 @@ def test_negative_sentinel_counters_skipped():
 
 
 def test_counter_keys_cover_the_bench_contract():
-    for key in ("operand_passes", "tpu_kernel_launches", "tpu_pack_ops"):
+    for key in ("operand_passes", "tpu_kernel_launches", "tpu_pack_ops",
+                "contract_violations"):
         assert key in COUNTER_KEYS
+    for key in ("contracts_checked", "contract_rules_evaluated"):
+        assert key in MIN_COUNTER_KEYS
+
+
+_ANALYSIS_ROW = (
+    "kernel/analysis_contracts,0.0,"
+    "contracts_checked={c};contract_rules_evaluated={r};"
+    "contract_violations={v}"
+)
+
+
+def test_coverage_counters_gate_shrink_not_growth():
+    """contracts_checked/rules_evaluated regress when they DECREASE (a
+    registered contract silently vanished); growth is only a note."""
+    base = _artifact([_ANALYSIS_ROW.format(c=13, r=39, v=0)])
+    fewer = _artifact([_ANALYSIS_ROW.format(c=12, r=36, v=0)])
+    regs, notes = compare_artifacts(base, fewer)
+    assert any("COVERAGE" in r and "contracts_checked" in r for r in regs)
+    assert any("COVERAGE" in r and "contract_rules_evaluated" in r
+               for r in regs)
+    regs, notes = compare_artifacts(fewer, base)
+    assert regs == []
+    assert any("grew" in n and "contracts_checked" in n for n in notes)
+
+
+def test_contract_violations_gate_at_zero():
+    base = _artifact([_ANALYSIS_ROW.format(c=13, r=39, v=0)])
+    red = _artifact([_ANALYSIS_ROW.format(c=13, r=39, v=1)])
+    regs, _ = compare_artifacts(base, red)
+    assert any("COUNT" in r and "contract_violations" in r for r in regs)
 
 
 def test_main_exit_codes(tmp_path):
@@ -164,3 +196,4 @@ def test_checked_in_baseline_validates_and_self_compares():
                for n in names)
     assert any(n.startswith("kernel/gemm_autotune_") for n in names)
     assert any(n.startswith("kernel/gemm_decode_reuse_") for n in names)
+    assert "kernel/analysis_contracts" in names

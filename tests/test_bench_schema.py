@@ -70,20 +70,20 @@ def test_known_versions_accepted_unknown_rejected():
     """Each additive bump keeps stored history validating; unknown
     versions stay hard errors."""
     from benchmarks.schema import (
-        SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4,
+        SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4, SCHEMA_V5,
     )
 
     doc = make_artifact(GOOD_CSV)
-    assert doc["schema"] == SCHEMA_V4
+    assert doc["schema"] == SCHEMA_V5
     validate_artifact(doc)
-    for old in (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3):
+    for old in (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4):
         prev = copy.deepcopy(doc)
         prev["schema"] = old
         validate_artifact(prev)
-    v5 = copy.deepcopy(doc)
-    v5["schema"] = "repro.bench_kernels/v5"
+    v6 = copy.deepcopy(doc)
+    v6["schema"] = "repro.bench_kernels/v6"
     with pytest.raises(ValueError, match="schema mismatch"):
-        validate_artifact(v5)
+        validate_artifact(v6)
 
 
 def test_serve_kv_cache_row_names_fit_grammar():

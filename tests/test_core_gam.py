@@ -23,7 +23,16 @@ from repro.core import (
 )
 from repro.core.partition import block_amax
 
-jax.config.update("jax_enable_x64", False)
+
+@pytest.fixture(autouse=True)
+def _f32_numerics():
+    # The GAM mantissa-split tables below assume f32 math; pin it per
+    # test instead of mutating global config at import time (MOR004).
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    yield
+    jax.config.update("jax_enable_x64", prev)
+
 
 PARTS = [PER_TENSOR, PER_BLOCK_128, PER_CHANNEL, Partition("block", (64, 64)),
          Partition("subchannel", sub=32)]

@@ -24,7 +24,13 @@ from repro.core import (
     quant_dequant,
     relative_error,
 )
-from repro.core.mor import STATS_WIDTH
+from repro.core.mor import (
+    STAT_DECISION,
+    STAT_FRAC_BF16,
+    STAT_FRAC_E4M3,
+    STAT_FRAC_E5M2,
+    STATS_WIDTH,
+)
 
 
 def _rand(shape, scale=1.0, seed=0):
@@ -38,7 +44,7 @@ def test_tensor_level_accepts_wellscaled():
     pol = MoRPolicy(recipe="tensor", partition="block")
     y, stats = mor_quantize(x, pol)
     # Gaussian data quantizes well under per-block GAM: accepted.
-    assert float(stats[0]) == 1.0
+    assert float(stats[STAT_DECISION]) == 1.0
     err = float(relative_error(x, y))
     assert err < 0.045
     assert not np.allclose(np.asarray(y), np.asarray(x))  # actually quantized
@@ -52,7 +58,7 @@ def test_tensor_level_rejects_wide_dynamic_range():
     x = jnp.asarray(mag * np.sign(rng.standard_normal((256, 256))))
     pol = MoRPolicy(recipe="tensor", partition="tensor")
     y, stats = mor_quantize(x, pol)
-    assert float(stats[0]) == 0.0
+    assert float(stats[STAT_DECISION]) == 0.0
     np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
 
 
@@ -62,7 +68,7 @@ def test_threshold_monotonicity():
     decisions = []
     for th in (1e-5, 0.01, 0.045, 0.5):
         _, stats = mor_quantize(x, MoRPolicy(recipe="tensor", threshold=th))
-        decisions.append(float(stats[0]))
+        decisions.append(float(stats[STAT_DECISION]))
     assert decisions == sorted(decisions)
 
 
@@ -77,7 +83,9 @@ def test_sub2_blocks_mix():
     x = jnp.asarray(np.concatenate([good, bad], axis=0))
     pol = MoRPolicy(recipe="sub2", partition="block")
     y, stats = mor_quantize(x, pol)
-    f4, f5, fbf = float(stats[3]), float(stats[4]), float(stats[5])
+    f4, f5, fbf = (float(stats[STAT_FRAC_E4M3]),
+                   float(stats[STAT_FRAC_E5M2]),
+                   float(stats[STAT_FRAC_BF16]))
     assert f5 == 0.0  # two-way never selects E5M2
     assert 0.0 < f4 < 1.0 and 0.0 < fbf < 1.0
     # BF16 blocks are bit-identical to the input.
@@ -95,7 +103,7 @@ def test_sub3_uses_e5m2():
     x = jnp.asarray(mag)
     pol = MoRPolicy(recipe="sub3", partition="tensor")
     y, stats = mor_quantize(x, pol)
-    assert float(stats[4]) > 0.0  # some E5M2 usage
+    assert float(stats[STAT_FRAC_E5M2]) > 0.0  # some E5M2 usage
     assert np.all(np.isfinite(np.asarray(y)))
 
 

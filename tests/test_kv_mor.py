@@ -10,7 +10,15 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.core import TENSOR_MOR
-from repro.core.mor import STATS_WIDTH
+from repro.core.mor import (
+    STAT_DECISION,
+    STAT_FRAC_BF16,
+    STAT_FRAC_E4M3,
+    STAT_FRAC_E5M2,
+    STAT_FRAC_NVFP4,
+    STAT_NONZERO_FRAC,
+    STATS_WIDTH,
+)
 from repro.kernels.ref import TAG_BF16, TAG_E4M3, TAG_E5M2, TAG_NVFP4
 from repro.models import init_cache, init_params, make_decode_fn, make_tokens
 from repro.models.attention import (
@@ -69,8 +77,10 @@ def test_quantize_kv_mor_stats_row():
     *_, row = quantize_kv_mor(x, with_stats=True)
     row = np.asarray(row)
     assert row.shape == (STATS_WIDTH,)
-    assert row[0] == 1.0 and row[6] == 16  # decision, block count
-    assert abs(row[3] + row[4] + row[5] - 1.0) < 1e-6
+    assert row[STAT_DECISION] == 1.0
+    assert row[STAT_NONZERO_FRAC] == 16  # block count in cache rows
+    assert abs(row[STAT_FRAC_E4M3] + row[STAT_FRAC_E5M2]
+               + row[STAT_FRAC_BF16] - 1.0) < 1e-6
 
 
 # ----------------------------------------------------- cold-tier sub4 --
@@ -107,7 +117,9 @@ def test_kv_bytes_per_element_by_tag():
     mixed = jnp.asarray([TAG_E4M3, TAG_NVFP4], jnp.uint8)
     assert abs(float(kv_bytes_per_element(mixed)) - 0.78125) < 1e-6
     row = np.asarray(kv_stats_row(mixed))
-    assert row[3] == 0.5 and row[8] == 0.5 and row[6] == 2
+    assert row[STAT_FRAC_E4M3] == 0.5
+    assert row[STAT_FRAC_NVFP4] == 0.5
+    assert row[STAT_NONZERO_FRAC] == 2
 
 
 # ------------------------------------------------------- decode parity --

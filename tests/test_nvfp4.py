@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import contracts, hlo_rules
 from repro.core import NVFP4, NVFP4_MICRO, MoRPolicy, mor_quantize
 from repro.core.formats import (
     cast_to_nvfp4,
@@ -289,26 +290,27 @@ def test_fully_nvfp4_qtensor_bytes_per_element():
 
 
 # ------------------------------------------------- TPU cross-lowering ---
-def _tpu_lowering_text(fn, *args):
-    try:
-        traced = jax.jit(fn).trace(*args)
-        return traced.lower(lowering_platforms=("tpu",)).as_text()
-    except TypeError:
+def _check_contract(name):
+    """Evaluate a registry contract, skipping on jax versions without
+    the cross-platform lowering API (the -1 launch sentinel)."""
+    report = contracts.check(name)
+    if report.counters.get("tpu_kernel_launches") == -1:
         pytest.skip("this jax has no cross-platform lowering API")
+    assert report.ok, report.render()
+    return report
 
 
 def test_sub4_select_kernel_lowers_for_tpu():
-    """The fused four-way selection stays one tpu_custom_call."""
-    pol = MoRPolicy(recipe="sub4", backend="pallas")
-    x = _nvfp4_friendly((256, 256), seed=14)
-    txt = _tpu_lowering_text(lambda a: mor_quantize(a, pol)[0], x)
-    assert txt.count("tpu_custom_call") == 1
+    """The fused four-way selection stays one tpu_custom_call
+    (``mor_quantize_sub4`` in the contract registry)."""
+    _check_contract("mor_quantize_sub4")
 
 
 def test_sub4_qdot_lowers_to_single_launch():
     """Acceptance: ONE tpu_custom_call per serving GEMM against a
-    fully-NVFP4 weight."""
-    from repro.serve.quantized import qdot, quantize_weight
+    fully-NVFP4 weight (``qdot_sub4`` in the contract registry), and
+    the probe weight really is fully quantized."""
+    from repro.serve.quantized import quantize_weight
 
     w = _nvfp4_friendly((256, 256), seed=15).T
     qt, _ = quantize_weight(
@@ -316,11 +318,7 @@ def test_sub4_qdot_lowers_to_single_launch():
                                                 backend="xla")
     )
     assert qt.frac_quantized == 1.0
-    x = _rand((64, 256), seed=16, dtype=jnp.bfloat16)
-    txt = _tpu_lowering_text(
-        lambda a, q: qdot(a, q, backend="pallas"), x, qt
-    )
-    assert txt.count("tpu_custom_call") == 1
+    _check_contract("qdot_sub4")
 
 
 # Hypothesis property sweeps live in test_nvfp4_props.py behind the

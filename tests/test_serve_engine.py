@@ -165,7 +165,9 @@ def test_shared_cur_index_decode_diverges(dense_model):
     # reassociation between them varies with the process hash seed
     # (observed up to ~2e-3 across PYTHONHASHSEED values). 5e-3 clears
     # that noise while staying ~4x below the short slot's real
-    # divergence (~2e-2).
+    # divergence (~2e-2). This is the repo's one known remaining
+    # hash-seed sensitivity, carried on the lint allowlist:
+    # docs/analysis.md#allowlist.
     np.testing.assert_allclose(
         np.asarray(lg_vec[1, 0, : cfg.vocab]),
         np.asarray(lg_old[1, 0, : cfg.vocab]), atol=5e-3,
@@ -428,3 +430,27 @@ def test_hybrid_family_fallback_matches_sequential():
     eng.run_to_completion()
     for r, ref in zip(reqs, refs):
         assert r.done and r.out == ref
+
+
+# -------------------------------------------- structural contract --
+def test_decode_step_contract(dense_model):
+    """This engine's jitted decode step satisfies the registry's
+    ``engine_decode_step`` contract (repro.analysis.contracts): no
+    host round-trips inside the step, the KV pool buffers donated, no
+    f64, and the quantized weights' payload lanes consumed only by
+    sanctioned decode sites -- the same rules CI's lint job and the
+    bench sweep evaluate on the registry's own probe engine."""
+    from repro.analysis import engine_decode_report
+    from repro.core import MoRPolicy
+
+    cfg, params = dense_model
+    eng = Engine(
+        cfg, TENSOR_MOR, params,
+        ServeConfig(slots=4, max_seq=64, page_size=16, kv_mor=True),
+        quantize=MoRPolicy(recipe="sub3", backend="interpret"),
+        quantize_min_size=0,
+    )
+    report = engine_decode_report(eng)
+    assert report.ok, report.render()
+    assert report.counters["donated_args"] >= 1
+    assert report.counters["tainted_lanes"] > 0  # QTensor lanes seeded

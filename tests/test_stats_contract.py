@@ -33,6 +33,7 @@ from repro.core import (
     EVENT_GRAD,
     EVENT_MOMENT_M,
     EVENT_MOMENT_V,
+    STAT_EVENT_KIND,
     STATS_WIDTH,
     MoRPolicy,
     mor_quantize,
@@ -88,11 +89,11 @@ def test_optimizer_events_stamp_kind_lane():
     g = {"w": jnp.ones((256, 128), jnp.float32)}
     _, _, stats = compress_grads(
         g, "mor", policy=MoRPolicy(recipe="sub3", backend="xla"))
-    assert float(stats["w"][10]) == EVENT_GRAD
+    assert float(stats["w"][STAT_EVENT_KIND]) == EVENT_GRAD
     pm = encode_moment(
         jnp.ones((256, 128)), MoRPolicy(recipe="sub3", backend="xla"),
         kind=EVENT_MOMENT_V)
-    assert float(pm.stats[10]) == EVENT_MOMENT_V
+    assert float(pm.stats[STAT_EVENT_KIND]) == EVENT_MOMENT_V
     assert EVENT_MOMENT_M != EVENT_MOMENT_V != EVENT_GRAD != EVENT_GEMM
 
 

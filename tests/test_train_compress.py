@@ -43,6 +43,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.mor import (
+    STAT_EVENT_KIND,
+    STAT_FRAC_E4M3,
+    STAT_FRAC_E5M2,
+    STAT_FRAC_NVFP4,
+)
 from repro.core.policy import MoRPolicy
 from repro.optim.compress import (
     GRAD_COMPRESS_MODES,
@@ -270,7 +276,7 @@ def test_moment_budget_fully_fp8():
     pm = encode_moment(x, _xla("sub3"), kind=2.0)
     # Every block lands on an fp8 arm (ones are exact in both; the
     # dynamic-range gate picks which) -- 1 B/param payload either way.
-    assert float(pm.stats[3] + pm.stats[4]) == 1.0
+    assert float(pm.stats[STAT_FRAC_E4M3] + pm.stats[STAT_FRAC_E5M2]) == 1.0
     logical = float(logical_bytes_per_param(pm))
     physical = physical_bytes_per_param(pm)
     assert logical <= 1.05, logical
@@ -284,7 +290,7 @@ def test_moment_budget_fully_nvfp4_sub4():
     """A fully-NVFP4 sub4 second moment costs <= 0.65 B/param."""
     x = _nvfp4_exact((1024, 1024))
     pm = encode_moment(x, _xla("sub4"), kind=3.0)
-    assert float(pm.stats[8]) == 1.0  # frac_nvfp4: every block NVFP4
+    assert float(pm.stats[STAT_FRAC_NVFP4]) == 1.0  # every block NVFP4
     assert float(logical_bytes_per_param(pm)) <= 0.65
     assert physical_bytes_per_param(pm) <= 0.65
 
@@ -299,8 +305,8 @@ def test_moment_event_kind_stamped():
     assert isinstance(opt.v["w"], PackedMoment)
     # min_leaf floor: small leaves stay dense f32.
     assert isinstance(opt.m["scale"], jnp.ndarray)
-    assert float(opt.m["w"].stats[10]) == EVENT_MOMENT_M
-    assert float(opt.v["w"].stats[10]) == EVENT_MOMENT_V
+    assert float(opt.m["w"].stats[STAT_EVENT_KIND]) == EVENT_MOMENT_M
+    assert float(opt.v["w"].stats[STAT_EVENT_KIND]) == EVENT_MOMENT_V
 
 
 # ------------------------------------------------------------ sharding --

@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Repo-convention linter + structural-contract runner (CI's blocking
+``lint`` job).
+
+Default mode AST-lints the given paths (``src`` ``tools`` ``benchmarks``
+``tests`` when none are given) against the MOR001..MOR005 rules in
+``repro.analysis.ast_rules`` -- stdlib only, no jax needed.
+
+``--contracts`` additionally evaluates every registered structural
+contract (``repro.analysis.contracts.check_all``) -- run it with
+``REPRO_KERNEL_INTERPRET=1 JAX_PLATFORMS=cpu`` off-TPU, like CI does.
+
+Exit status is nonzero iff any violation is found. ``--list-rules``
+prints the rule inventory and exits.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+DEFAULT_PATHS = ("src", "tools", "benchmarks", "tests")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "paths", nargs="*",
+        help=f"files/dirs to lint (default: {' '.join(DEFAULT_PATHS)})",
+    )
+    ap.add_argument(
+        "--contracts", action="store_true",
+        help="also evaluate the structural contract registry "
+             "(imports jax, builds the probe cases)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true",
+        help="print AST rules and registered contracts, then exit",
+    )
+    args = ap.parse_args(argv)
+
+    from repro.analysis import ast_rules
+
+    if args.list_rules:
+        for rule, msg in sorted(ast_rules.RULES.items()):
+            print(f"{rule}: {msg}")
+        try:
+            from repro.analysis import contracts
+            for name in sorted(contracts.REGISTRY):
+                print(f"contract:{name}: {contracts.REGISTRY[name].notes}")
+        except ImportError as e:  # no jax in this interpreter
+            print(f"(contract registry unavailable: {e})")
+        return 0
+
+    paths = [
+        os.path.join(REPO, p) if not os.path.isabs(p) else p
+        for p in (args.paths or DEFAULT_PATHS)
+    ]
+    violations = ast_rules.lint_paths(paths)
+    for v in violations:
+        print(v.render())
+    print(
+        f"lint: {len(violations)} violation(s) over "
+        f"{len(ast_rules.RULES)} rule(s)"
+    )
+    failed = bool(violations)
+
+    if args.contracts:
+        from repro.analysis import check_all
+
+        summary = check_all()
+        for line in summary.violations:
+            print(f"contract: {line}")
+        print(
+            f"contracts: {summary.contracts_checked} checked, "
+            f"{summary.rules_evaluated} rule(s) evaluated, "
+            f"{len(summary.violations)} violation(s)"
+        )
+        failed = failed or not summary.ok
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -764,6 +764,7 @@ def main(smoke: bool = False, sharded: bool = True,
     # for -- compare.py fails the gate if contracts_checked ever
     # drops, and any violation fails the bench run itself.
     _bench_analysis_contracts(rows)
+    _bench_robust_guard(rows)
 
     # Multi-device sharded lane (possibly via a forced-device child).
     if sharded:
@@ -783,6 +784,28 @@ def _bench_analysis_contracts(rows):
         f"contracts_checked={summary.contracts_checked};"
         f"contract_rules_evaluated={summary.rules_evaluated};"
         f"contract_violations={len(summary.violations)}",
+    ))
+
+
+def _bench_robust_guard(rows):
+    """Guard-rail lane (docs/robustness.md): re-verify that the v4
+    stats guard lanes cost zero extra kernel launches and zero
+    operand-sized pack ops over the unguarded baseline (the
+    ``robust_guard_event`` contract), and enumerate the chaos
+    registry so a silently-dropped fault class or injector shrinks a
+    MIN-gated counter in compare.py."""
+    from repro.robust.faults import fault_specs
+
+    report = contracts.assert_contract("robust_guard_event")
+    specs = fault_specs()
+    covered = len(specs)  # registry == coverage, pinned by
+    # tests/test_robust_chaos.py::test_every_fault_class_has_chaos_coverage
+    rows.append(csv_row(
+        "kernel/robust_guard", 0.0,
+        f"guard_clean_pack_ops={report.counters.get('tpu_pack_ops', -1)};"
+        f"guard_contract_violations={len(report.violations)};"
+        f"fault_classes_registered={len(specs)};"
+        f"fault_classes_covered={covered}",
     ))
 
 

@@ -76,6 +76,11 @@ COUNTER_KEYS = (
     # Static-analysis lane (kernel/analysis_contracts): the registry
     # sweep must stay violation-free, so any growth past 0 is red.
     "contract_violations",
+    # Guard-rail lane (kernel/robust_guard, docs/robustness.md): the
+    # v4 guard lanes must stay structurally free on the clean path --
+    # any operand-sized pack op or contract violation is red.
+    "guard_clean_pack_ops",
+    "guard_contract_violations",
 )
 
 # Coverage counters with the opposite gate direction: a DECREASE is the
@@ -84,6 +89,10 @@ COUNTER_KEYS = (
 MIN_COUNTER_KEYS = (
     "contracts_checked",
     "contract_rules_evaluated",
+    # Chaos registry (docs/robustness.md): fault classes and their
+    # chaos-test coverage may grow but never silently shrink.
+    "fault_classes_registered",
+    "fault_classes_covered",
 )
 
 # Name fragments of lanes whose wall clock is interpreter- or

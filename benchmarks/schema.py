@@ -7,11 +7,11 @@ slow lane runs ``python -m benchmarks.schema bench_kernels.json`` after
 the bench smoke, so a drifting producer fails the build instead of
 silently breaking downstream consumers.
 
-Schema ``repro.bench_kernels/v5`` (current; the validator also accepts
-``v1``..``v4`` artifacts so stored history keeps validating)::
+Schema ``repro.bench_kernels/v6`` (current; the validator also accepts
+``v1``..``v5`` artifacts so stored history keeps validating)::
 
     {
-      "schema": "repro.bench_kernels/v5",
+      "schema": "repro.bench_kernels/v6",
       "rows": [
         {"name": "kernel/<lane>_<variant>[_<size>]",   # row id
          "us":   12.3,                                  # mean wall us/call
@@ -40,7 +40,13 @@ compare.py gates it at threshold 0). v5 (additive): the smoke emits a
 all three: violations may not grow past 0, and -- via its
 ``MIN_COUNTER_KEYS`` direction -- the checked/evaluated counts may not
 *shrink*, so silently dropping a registered contract fails the gate
-the same way dropping a bench row does. Row grammar is unchanged
+the same way dropping a bench row does. v6 (additive): the smoke also
+emits a ``kernel/robust_guard`` row (docs/robustness.md) whose
+``derived`` carries ``guard_clean_pack_ops`` /
+``guard_contract_violations`` (both gated at 0 growth: the stats
+guard lanes must stay structurally free on the clean path) and
+``fault_classes_registered`` / ``fault_classes_covered`` (MIN-gated:
+the chaos registry may not shrink). Row grammar is unchanged
 across all versions:
 
 * ``name`` matches ``^kernel/[A-Za-z0-9._-]+$`` and is unique per
@@ -66,15 +72,16 @@ SCHEMA_V2 = "repro.bench_kernels/v2"
 SCHEMA_V3 = "repro.bench_kernels/v3"
 SCHEMA_V4 = "repro.bench_kernels/v4"
 SCHEMA_V5 = "repro.bench_kernels/v5"
-SCHEMA = SCHEMA_V5
+SCHEMA_V6 = "repro.bench_kernels/v6"
+SCHEMA = SCHEMA_V6
 ACCEPTED_SCHEMAS = (
-    SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4, SCHEMA_V5
+    SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4, SCHEMA_V5, SCHEMA_V6
 )
 _NAME_RE = re.compile(r"^kernel/[A-Za-z0-9._-]+$")
 
 __all__ = [
     "SCHEMA", "SCHEMA_V1", "SCHEMA_V2", "SCHEMA_V3", "SCHEMA_V4",
-    "SCHEMA_V5", "ACCEPTED_SCHEMAS",
+    "SCHEMA_V5", "SCHEMA_V6", "ACCEPTED_SCHEMAS",
     "make_artifact", "validate_artifact", "rows_from_csv",
 ]
 
@@ -95,7 +102,7 @@ def make_artifact(csv_rows: List[str]) -> Dict[str, Any]:
 
 def validate_artifact(doc: Any) -> None:
     """Raise ValueError unless ``doc`` conforms to an accepted schema
-    version (v1..v5 -- the row grammar is shared)."""
+    version (v1..v6 -- the row grammar is shared)."""
     if not isinstance(doc, dict):
         raise ValueError(f"artifact must be an object, got {type(doc)}")
     extra = set(doc) - {"schema", "rows"}

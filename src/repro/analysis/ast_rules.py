@@ -31,6 +31,16 @@ MOR005   wall-clock (``time.time``/``perf_counter``/``monotonic``) or
          jit-compiled function -- they execute once at trace time and
          freeze into the compiled program, so the "timestamp" or
          "random" value is a constant across every call.
+MOR006   bare ``assert`` inside a Pallas *kernel body* (a function
+         under ``src/repro/kernels/`` taking ``*_ref`` buffer
+         parameters) -- a kernel body runs on *traced* refs, so the
+         assert either fires on abstract values at trace time (a
+         confusing Tracer-bool crash) or is a compile-time constant
+         that never checks runtime data. Value checks belong in
+         ``pl.debug_check`` (once the installed jax ships it) and
+         static shape checks in the *launcher*, where MOR002's
+         kernel-dir exemption already sanctions them. The complement
+         of MOR002: launchers may assert, kernel bodies may not.
 =======  ==============================================================
 
 Stdlib-only on purpose: ``tools/lint_repro.py`` runs the AST pass
@@ -65,6 +75,9 @@ RULES = {
               "entry point",
     "MOR005": "wall-clock/host-RNG call inside jitted code; it freezes "
               "at trace time",
+    "MOR006": "bare assert inside a pallas kernel body; use "
+              "pl.debug_check (when available) or hoist the check to "
+              "the launcher",
 }
 
 # Path fragments exempt from MOR002: kernel bodies assert traced-shape
@@ -290,12 +303,48 @@ def _rule_clock_in_jit(tree, path, out):
                 ))
 
 
+def _rule_kernel_assert(tree, path, out):
+    norm = path.replace("\\", "/")
+    if KERNEL_PATH_FRAGMENT not in norm:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        # Kernel bodies are identified by the repo's pallas calling
+        # convention: two or more `*_ref` buffer parameters (every
+        # kernel body takes at least an input and an output ref;
+        # launchers take arrays/policies instead).
+        args = node.args
+        names = [
+            a.arg
+            for a in (*args.posonlyargs, *args.args, *args.kwonlyargs)
+        ]
+        if sum(n.endswith("_ref") for n in names) < 2:
+            continue
+        # Walk this body only, without descending into nested defs --
+        # a launcher closure defined inside a kernel body (or vice
+        # versa) must be attributed to itself, not its parent.
+        stack = list(ast.iter_child_nodes(node))
+        while stack:
+            inner = stack.pop()
+            if isinstance(inner, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            if isinstance(inner, ast.Assert):
+                out.append(LintViolation(
+                    "MOR006", path, inner.lineno,
+                    RULES["MOR006"] + f" (in kernel body {node.name})",
+                ))
+            stack.extend(ast.iter_child_nodes(inner))
+
+
 _ALL_RULES = (
     _rule_hash,
     _rule_bare_assert,
     _rule_stats_magic_index,
     _rule_import_time_config,
     _rule_clock_in_jit,
+    _rule_kernel_assert,
 )
 
 

@@ -752,3 +752,98 @@ register(Contract(
     notes="jitted prefill: no host round-trips; quantized weights' "
           "payload lanes stay in sanctioned consumers",
 ))
+
+
+# ------------------------------------------------------------ robust --
+def _robust_guard_case() -> ContractCase:
+    """The PR-10 guard acceptance: a full real-quantization event with
+    the layout-v4 guard lanes *consumed* (stats returned alongside the
+    pack) lowers with zero operand-sized XLA ops beyond the bare fused
+    selection -- nonfinite detection rides the amax / per-block error
+    sums the event already computes, so the clean path's structure is
+    byte-for-byte the PR-5 one-pass contract."""
+    from repro.core.mor import quantize_for_gemm
+    from repro.core.partition import Partition
+    from repro.core.policy import MoRPolicy
+    from repro.kernels import ops as kops
+
+    pol = MoRPolicy(recipe="sub3", partition="block", backend="pallas")
+    part = Partition("block", (128, 128))
+    x = jnp.zeros((256, 256), jnp.bfloat16)
+    return ContractCase(
+        fn=lambda a: quantize_for_gemm(a, pol),
+        args=(x,),
+        operand_shape=(256, 256),
+        baseline_fn=lambda a: kops.mor_select(
+            a, part, "sub3", "gam", backend="pallas"
+        ).y,
+    )
+
+
+register(Contract(
+    name="robust_guard_event",
+    build=_robust_guard_case,
+    custom_calls=SINGLE_LAUNCH,
+    max_pack_ops_over_baseline=MAX_PACK_OPS_OVER_SELECT,
+    taint=_TAINT,
+    notes="stats-v4 guard lanes (guard_flags/fallback_count) cost zero "
+          "operand-sized passes on the clean path (docs/robustness.md)",
+))
+
+
+def _train_step_case() -> ContractCase:
+    """The *whole* training step -- loss, grads, MoR gradient
+    compression, packed-moment AdamW -- as one taint case: every MoR
+    payload lane born anywhere in the step (compressed grads, packed
+    moments) must reach only sanctioned kernels/decoders. The PR-9
+    item this closes ran the walk over single events; this traces the
+    full composition on the reduced llama config."""
+    import dataclasses as _dc
+
+    from repro.configs import get_config, reduced
+    from repro.core import paper_default
+    from repro.models import init_params
+    from repro.optim.adamw import AdamWConfig, init_opt_state
+    from repro.optim.moments import MomentPolicy
+    from repro.robust import GuardPolicy
+    from repro.train import TrainConfig, make_train_step
+
+    cfg = _dc.replace(reduced(get_config("llama3-8b")), vocab=64)
+    pol = paper_default("sub3")
+    pol = pol.replace(
+        act=pol.act.replace(backend="xla"),
+        weight=pol.weight.replace(backend="xla"),
+        grad=pol.grad.replace(backend="xla"),
+    )
+    xla_sub3 = lambda **kw: __import__(
+        "repro.core.policy", fromlist=["MoRPolicy"]
+    ).MoRPolicy(recipe="sub3", backend="xla", **kw)
+    moments = MomentPolicy(m=xla_sub3(), v=xla_sub3(threshold=0.02))
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(warmup_steps=5, total_steps=50),
+        compress_grads="mor_ef",
+        grad_policy=xla_sub3(),
+        moments=moments,
+        # Guarded: the walk also covers the skip-step selects over the
+        # packed-moment payload lanes (docs/robustness.md).
+        guard=GuardPolicy(),
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params, moments=moments, ef=True)
+    step = make_train_step(cfg, pol, tcfg)
+    batch = {
+        "tokens": jnp.zeros((4, 32), jnp.int32),
+        "labels": jnp.zeros((4, 32), jnp.int32),
+    }
+    return ContractCase(fn=step, args=(params, opt, batch))
+
+
+register(Contract(
+    name="train_step_taint",
+    build=_train_step_case,
+    taint=_TAINT,
+    seed_kernel_outputs=True,
+    notes="payload-lane taint walk over the full train step (grads "
+          "compressed mor_ef + packed Adam moments): packed bytes only "
+          "decode in sanctioned modules, no f64 anywhere in the step",
+))

@@ -99,9 +99,15 @@ def scales_from_bmax(
     g_amax = jnp.max(bmax) if group_amax is None else group_amax
 
     # Zero guards: all-zero tensor / all-zero (or padding-only) blocks get
-    # scale 1.0 -- quantizing zeros is exact under any scale.
-    safe_g = jnp.where(g_amax > 0, g_amax, 1.0)
-    safe_b = jnp.where(bmax > 0, bmax, safe_g)
+    # scale 1.0 -- quantizing zeros is exact under any scale. Nonfinite
+    # guards ride the same selects: an Inf/NaN amax (poisoned operand)
+    # would otherwise zero out or NaN the scale of every block sharing
+    # the group mantissa. Sanitizing keeps clean blocks' scales exact;
+    # poisoned blocks are contained downstream (BF16 selection arm /
+    # skip-step) and reported via the stats guard lanes.
+    g_ok = (g_amax > 0) & jnp.isfinite(g_amax)
+    safe_g = jnp.where(g_ok, g_amax, 1.0)
+    safe_b = jnp.where((bmax > 0) & jnp.isfinite(bmax), bmax, safe_g)
 
     s_g = fmt.amax / safe_g
     s_b = fmt.amax / safe_b  # ideal per-block FP32 scale

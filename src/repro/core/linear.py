@@ -91,7 +91,7 @@ def mor_dot(x, w, token, policy: MoRDotPolicy):
     >>> w = jnp.ones((128, 32), jnp.bfloat16)
     >>> y, fwd_stats = mor_dot(x, w, new_token(), SUBTENSOR3_MOR)
     >>> y.shape, fwd_stats.shape       # one stats row per fwd event
-    ((4, 32), (2, 10))
+    ((4, 32), (2, 14))
     >>> float(y[0, 0])                 # ones @ ones, exact under fp8
     128.0
 

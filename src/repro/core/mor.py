@@ -21,7 +21,7 @@ points) the group amax behind the Alg. 1 mantissa -- are allreduced
 over the named axes, so per-block decisions are bit-identical to the
 single-device run. See docs/sharding.md.
 
-Stats vector layout v3 (f32, STATS_WIDTH = 12):
+Stats vector layout v4 (f32, STATS_WIDTH = 14):
   [0] decision        1.0 if the preferred low-precision type was accepted
                       (tensor-level), the fraction of blocks in the
                       recipe's preferred format (sub-*: E4M3 for
@@ -56,10 +56,33 @@ Stats vector layout v3 (f32, STATS_WIDTH = 12):
                       0.5625, a disabled ('off') event 2.0 -- this lane
                       is the HBM bytes-per-param budget the optimizer
                       state asserts against.
+  [12] guard_flags    nonfinite-containment sentinels (repro.robust), a
+                      sum of power-of-two flag values: +1.0 the group
+                      amax was nonfinite (the whole operand is suspect;
+                      Alg. 1 scales were derived from a sanitized amax
+                      of 1.0), +2.0 at least one block's error sums
+                      were nonfinite (those blocks carry NaN/Inf
+                      values; the sub-tensor recipes route them to the
+                      BF16 arm so the poison is preserved verbatim, not
+                      laundered through an fp8 cast), +4.0 a stale
+                      delayed-scaling amax failed to cover the operand
+                      even after the bounded re-encode backoff
+                      (repro.robust.guard.requantize_with_backoff).
+                      0.0 on every clean event. Detection rides the
+                      amax / per-block error sums the event already
+                      computes: the clean path pays zero additional
+                      operand-sized passes (asserted by the
+                      'robust_guard_event' analysis contract).
+  [13] fallback_count number of blocks whose error sums were nonfinite
+                      (psum'd under mesh_axes like every other block
+                      count, so shards agree bit-identically). The
+                      block-granular measure behind guard_flags'
+                      +2.0 bit.
 
 v1 (width 8, PRs 1-3) is layout v2 without [8]/[9] and with 0.0 instead
 of the -1.0 disabled sentinel; v2 (width 10, PRs 4-7) is v3 without the
-optimizer-event lanes [10]/[11]. Every consumer keys on STATS_WIDTH
+optimizer-event lanes [10]/[11]; v3 (width 12, PRs 8-9) is v4 without
+the guard lanes [12]/[13]. Every consumer keys on STATS_WIDTH
 (tests/test_stats_contract.py guards the migration).
 """
 from __future__ import annotations
@@ -95,6 +118,12 @@ __all__ = [
     "STAT_MICRO_SCALE_BPE",
     "STAT_EVENT_KIND",
     "STAT_PAYLOAD_BPE",
+    "STAT_GUARD_FLAGS",
+    "STAT_FALLBACK_COUNT",
+    "GUARD_OK",
+    "GUARD_NONFINITE_AMAX",
+    "GUARD_BLOCK_FALLBACK",
+    "GUARD_STALE_SCALE",
     "EVENT_GEMM",
     "EVENT_GRAD",
     "EVENT_MOMENT_M",
@@ -106,9 +135,9 @@ __all__ = [
     "partition_of",
 ]
 
-STATS_WIDTH = 12
+STATS_WIDTH = 14
 
-# Named lane indices of the layout-v3 stats row documented above. All
+# Named lane indices of the layout-v4 stats row documented above. All
 # stats-row consumers index through these -- the v1->v2->v3 migrations
 # re-numbered lanes twice, and the MOR003 lint rule
 # (repro.analysis.ast_rules) rejects new literal-index sites.
@@ -124,6 +153,19 @@ STAT_FRAC_NVFP4 = 8
 STAT_MICRO_SCALE_BPE = 9
 STAT_EVENT_KIND = 10
 STAT_PAYLOAD_BPE = 11
+STAT_GUARD_FLAGS = 12
+STAT_FALLBACK_COUNT = 13
+
+# Stats lane [12] (guard_flags) values: a sum of the power-of-two flags
+# below (0.0 = clean event). Produced here and by
+# repro.robust.guard.requantize_with_backoff; consumed by the skip-step
+# ladder (repro.optim.adamw), summarize_mor_stats' guard counters, and
+# the chaos suite (tests/test_robust_chaos.py). docs/robustness.md is
+# the story.
+GUARD_OK = 0.0
+GUARD_NONFINITE_AMAX = 1.0
+GUARD_BLOCK_FALLBACK = 2.0
+GUARD_STALE_SCALE = 4.0
 
 # Stats lane [10] (event_kind) values. GEMM operand events are emitted
 # by this module; the optimizer layer (repro.optim) stamps its rows so
@@ -166,7 +208,7 @@ def quant_dequant(
 
 def _stats(
     decision, rel_err, amax, f_e4, f_e5, f_bf, nz_frac, m_g,
-    f_nv=0.0, micro_bpe=0.0,
+    f_nv=0.0, micro_bpe=0.0, guard_flags=0.0, fallback_count=0.0,
 ) -> jnp.ndarray:
     # [11] payload_bpe follows from the tag mixture: fp8 arms store one
     # byte/elt, BF16 two, NVFP4 half a byte plus one E4M3 micro-scale
@@ -190,8 +232,32 @@ def _stats(
             jnp.float32(micro_bpe),
             jnp.float32(EVENT_GEMM),
             payload_bpe,
+            jnp.float32(guard_flags),
+            jnp.float32(fallback_count),
         ]
     )
+
+
+def _guard_lanes(group_amax, block_err_sums=None, mesh_axes=()):
+    """Guard lanes [12]/[13] from aggregates the event already computed.
+
+    ``group_amax`` is the (allreduced) tensor amax and
+    ``block_err_sums`` the per-block quantization-error sums -- both
+    scalar / block-grid sized, so the nonfinite checks below add zero
+    operand-sized work. A NaN/Inf element forces its block's amax and
+    error sum nonfinite (max/sum propagate), so per-block error sums
+    are a complete poisoned-block detector.
+    """
+    amax_bad = ~jnp.isfinite(jnp.float32(group_amax))
+    flags = jnp.where(amax_bad, GUARD_NONFINITE_AMAX, GUARD_OK)
+    if block_err_sums is None:
+        return flags, jnp.float32(0.0)
+    fallback = psum_over(
+        jnp.sum((~jnp.isfinite(block_err_sums)).astype(jnp.float32)),
+        mesh_axes,
+    )
+    flags = flags + jnp.where(fallback > 0, GUARD_BLOCK_FALLBACK, GUARD_OK)
+    return flags, fallback
 
 
 def _tensor_level(x2d: jnp.ndarray, policy: MoRPolicy):
@@ -216,8 +282,12 @@ def _tensor_level(x2d: jnp.ndarray, policy: MoRPolicy):
     y = jnp.where(ok, q.y, x2d)
     okf = ok.astype(jnp.float32)
     nz = psum_over(jnp.sum(q.counts), axes) / global_size(x2d.size, axes)
+    # A nonfinite global error rejects (NaN < threshold is False), so a
+    # poisoned event degrades to whole-tensor BF16 passthrough.
+    gf, fb = _guard_lanes(q.group_amax, q.err_sums, axes)
     stats = _stats(
         okf, err, q.group_amax, okf, 0.0, 1.0 - okf, nz, q.group_mantissa,
+        guard_flags=gf, fallback_count=fb,
     )
     tags = jnp.broadcast_to(
         jnp.where(ok, TAG_E4M3, TAG_BF16).astype(jnp.int32),
@@ -239,11 +309,16 @@ def _sub_tensor_stats(r, policy: MoRPolicy, x_size: int) -> jnp.ndarray:
     f4 = psum_over(
         jnp.sum((r.sel == 0).astype(jnp.float32)), axes
     ) / nblocks
+    # Poisoned blocks (nonfinite error sums) lose every fp8/NVFP4
+    # comparison (NaN compares False, Inf error exceeds any gate), so
+    # selection routes them to the BF16 arm -- the guard lanes report
+    # how many blocks took that containment path.
+    gf, fb = _guard_lanes(r.group_amax, r.e4_sums, axes)
 
     if policy.recipe == "sub2":
         return _stats(
             f4, global_e4_err, r.group_amax, f4, 0.0, 1.0 - f4, nz,
-            r.group_mantissa,
+            r.group_mantissa, guard_flags=gf, fallback_count=fb,
         )
 
     f5 = psum_over(
@@ -252,7 +327,7 @@ def _sub_tensor_stats(r, policy: MoRPolicy, x_size: int) -> jnp.ndarray:
     if policy.recipe == "sub3":
         return _stats(
             f4, global_e4_err, r.group_amax, f4, f5, 1.0 - f4 - f5, nz,
-            r.group_mantissa,
+            r.group_mantissa, guard_flags=gf, fallback_count=fb,
         )
 
     # sub4: the preferred format is NVFP4; decision = frac_nvfp4 and the
@@ -264,6 +339,7 @@ def _sub_tensor_stats(r, policy: MoRPolicy, x_size: int) -> jnp.ndarray:
         f_nv, global_e4_err, r.group_amax, f4, f5,
         1.0 - f4 - f5 - f_nv, nz, r.group_mantissa,
         f_nv, f_nv / _kref.NVFP4_MICRO,
+        guard_flags=gf, fallback_count=fb,
     )
 
 
@@ -293,8 +369,12 @@ def _static_e4m3(x2d: jnp.ndarray, policy: MoRPolicy):
     n = jnp.maximum(psum_over(jnp.sum(q.counts), axes), 1.0)
     err = psum_over(jnp.sum(q.err_sums), axes) / n
     nz = psum_over(jnp.sum(q.counts), axes) / global_size(x2d.size, axes)
+    # Static recipe: no BF16 arm to fall back to, so guard_flags is
+    # pure detection here -- poisoned blocks stay E4M3-cast and the
+    # optimizer-level skip-step rung is the containment.
+    gf, fb = _guard_lanes(q.group_amax, q.err_sums, axes)
     stats = _stats(1.0, err, q.group_amax, 1.0, 0.0, 0.0, nz,
-                   q.group_mantissa)
+                   q.group_mantissa, guard_flags=gf, fallback_count=fb)
     tags = jnp.full(q.err_sums.shape, TAG_E4M3, jnp.int32)
     return q.y, stats, tags
 
@@ -311,7 +391,9 @@ def _off_stats(x2d: jnp.ndarray, mesh_axes=()) -> jnp.ndarray:
     # consumers (summarize_mor_stats, MoRStatsTracker) must skip it or
     # passthrough events drag fwd_frac_bf16 toward 1 even when every
     # enabled event quantized.
-    return _stats(-1.0, 0.0, amax, 0.0, 0.0, 1.0, nz, 1.0)
+    gf, _ = _guard_lanes(amax)
+    return _stats(-1.0, 0.0, amax, 0.0, 0.0, 1.0, nz, 1.0,
+                  guard_flags=gf)
 
 
 def _decide(x2d: jnp.ndarray, policy: MoRPolicy):
@@ -354,7 +436,7 @@ def mor_quantize(
     >>> y.shape == x.shape and y.dtype == x.dtype
     True
     >>> stats.shape            # the STATS_WIDTH vector
-    (12,)
+    (14,)
     >>> float(stats[5])        # all-ones quantizes exactly: no BF16 blocks
     0.0
     """

@@ -98,7 +98,14 @@ def _group_amax(x: jnp.ndarray, mesh_axes=()):
     g_amax = pmax_over(
         jnp.max(jnp.abs(x.astype(jnp.float32))), mesh_axes
     )
-    return g_amax, jnp.where(g_amax > 0, g_amax, 1.0)
+    # Zero guard AND nonfinite guard: an Inf amax would otherwise pass
+    # straight into the Alg. 1 mantissa (Inf > 0 is True) and poison
+    # the scales of *every* block, clean ones included. Sanitizing to
+    # 1.0 keeps clean blocks' per-block scales finite while the
+    # poisoned blocks fall through to the BF16 arm; the raw g_amax is
+    # still returned first so the stats guard lanes see the event.
+    safe = jnp.where((g_amax > 0) & jnp.isfinite(g_amax), g_amax, 1.0)
+    return g_amax, safe
 
 
 def _group_mantissa(safe_g: jnp.ndarray, fmt: FormatSpec, algo: str):

@@ -424,7 +424,8 @@ def kv_bytes_per_element(tags: jnp.ndarray) -> jnp.ndarray:
 
 
 def kv_stats_row(tags: jnp.ndarray) -> jnp.ndarray:
-    """One STATS_WIDTH v3 stats row for a KV-cache quantization event.
+    """One STATS_WIDTH (layout v4) stats row for a KV-cache
+    quantization event.
 
     Same layout as the GEMM events (core.mor): [0] decision (1.0, the
     cache tier always quantizes), [3..5] frac_e4m3/e5m2/bf16, [6] block

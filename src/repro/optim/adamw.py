@@ -120,6 +120,7 @@ def adamw_update(
     *,
     decay_mask=None,
     moments: Optional[MomentPolicy] = None,
+    guard: Optional["GuardPolicy"] = None,
 ) -> Tuple[Any, OptState, dict]:
     """Returns (new bf16 params, new opt state, metrics).
 
@@ -131,7 +132,17 @@ def adamw_update(
     train_step's summarizer) and the parameter-weighted logical
     bytes/param of each packed moment tree (``moment_bpe_m/v``).
     ``opt_state.ef`` rides through untouched -- the gradient
-    compression that owns it runs *before* this update."""
+    compression that owns it runs *before* this update.
+
+    With a ``guard`` (:class:`repro.robust.GuardPolicy`) whose
+    ``skip_nonfinite_updates`` is set, a nonfinite global grad norm --
+    any NaN/Inf gradient element makes the already-computed ``gnorm``
+    nonfinite, so detection is free -- drops the whole update: master
+    weights, both Adam moments (packed payload lanes bit-exact, since
+    ``select`` picks values and the poisoned branch never propagates)
+    and the step counter all keep their previous values. Metrics then
+    carry ``guard_skip`` (1.0 on a dropped step) for train_step's EF
+    preservation and the chaos suite's counters."""
     step = opt_state.step + 1
     lr = cosine_lr(cfg, step)
 
@@ -186,6 +197,20 @@ def adamw_update(
             if rows is not None:
                 metrics[f"moment_stats_{name}"] = rows
             metrics[f"moment_bpe_{name}"] = mean_logical_bpe(tree)
+    if guard is not None and guard.skip_nonfinite_updates:
+        from repro.robust.guard import tree_select
+
+        ok = jnp.isfinite(gnorm)
+        new_master = tree_select(ok, new_master, opt_state.master)
+        new_m = tree_select(ok, new_m, opt_state.m)
+        new_v = tree_select(ok, new_v, opt_state.v)
+        step = jnp.where(ok, step, opt_state.step)
+        # Params re-derive from the *selected* master so a skipped step
+        # republishes the exact previous weights.
+        new_params = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16), new_master
+        )
+        metrics["guard_skip"] = 1.0 - ok.astype(jnp.float32)
     new_state = OptState(
         new_master, new_m, new_v, step, opt_state.ef
     )

@@ -1,0 +1,44 @@
+"""Numerics guard rails and fault injection (docs/robustness.md).
+
+Two halves, one subsystem:
+
+- :mod:`repro.robust.guard` -- the *containment* side. ``GuardPolicy``
+  configures the escalation ladder (block BF16 fallback -> tensor BF16
+  fallback -> optimizer skip-step -> bounded re-encode retry) whose
+  detection signals ride the stats guard lanes emitted by
+  ``repro.core.mor`` (layout v4, lanes [12]/[13]) at zero extra
+  operand-sized cost on the clean path.
+- :mod:`repro.robust.faults` -- the *adversary* side. A deterministic,
+  seed-keyed fault-injection registry (NaN/Inf gradients, payload
+  bit-flips, scale corruption, stale amaxes, trashed KV pages) that the
+  differential chaos suite (tests/test_robust_chaos.py) and the
+  ``kernel/robust_guard`` bench lane enumerate, so every registered
+  fault class is provably detected, contained, and reported.
+"""
+from .guard import (
+    GuardPolicy,
+    guard_flag_set,
+    requantize_with_backoff,
+    tree_select,
+)
+from .faults import (
+    FaultSpec,
+    fault_names,
+    fault_specs,
+    get_fault,
+    make_grad_fault,
+    poison_tree,
+)
+
+__all__ = [
+    "GuardPolicy",
+    "guard_flag_set",
+    "requantize_with_backoff",
+    "tree_select",
+    "FaultSpec",
+    "fault_names",
+    "fault_specs",
+    "get_fault",
+    "make_grad_fault",
+    "poison_tree",
+]

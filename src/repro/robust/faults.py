@@ -1,0 +1,240 @@
+"""Deterministic, seed-keyed fault injection (the chaos harness).
+
+Every fault class the guard rails claim to survive is registered here,
+so the differential chaos suite (tests/test_robust_chaos.py) and the
+``kernel/robust_guard`` bench lane can *enumerate* the classes -- a new
+injector without a test asserting detection + containment shows up as
+a coverage gap, and `compare.py` gates the registered/covered counts
+against shrinking.
+
+All injectors are pure functions of (object, seed): the same seed
+always corrupts the same leaf/byte/bit, so an injected failure
+reproduces exactly and the differential assertions ("every other
+slot's tokens are bit-identical to the uninjected run") are meaningful.
+
+Layers:
+
+- ``train``: poison a gradient tree (NaN/Inf leaves) -- exercises the
+  BF16 selection arm through gradient compression and the optimizer
+  skip-step rung.
+- ``pack``: corrupt a :class:`~repro.kernels.ref.MixedOperand` after
+  packing (payload bit-flips, scale / micro-scale corruption) --
+  exercises decode-side containment and the serve quarantine.
+- ``quant``: stale group amax -- exercises the bounded re-encode
+  retry (:func:`repro.robust.guard.requantize_with_backoff`).
+- ``serve``: trash live KV pages in a :class:`PagedKVPool` --
+  exercises the engine's slot quarantine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FaultSpec",
+    "register_fault",
+    "fault_names",
+    "fault_specs",
+    "get_fault",
+    "poison_tree",
+    "make_grad_fault",
+]
+
+
+class FaultSpec(NamedTuple):
+    name: str
+    layer: str  # train | pack | quant | serve
+    description: str
+    inject: Callable
+
+
+_REGISTRY: Dict[str, FaultSpec] = {}
+
+
+def register_fault(name: str, layer: str, description: str):
+    """Decorator: add an injector to the fault-class registry."""
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"duplicate fault class {name!r}")
+        _REGISTRY[name] = FaultSpec(name, layer, description, fn)
+        return fn
+
+    return deco
+
+
+def fault_names() -> Tuple[str, ...]:
+    """All registered fault-class names, registration-ordered."""
+    return tuple(_REGISTRY)
+
+
+def fault_specs() -> Tuple[FaultSpec, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def get_fault(name: str) -> FaultSpec:
+    return _REGISTRY[name]
+
+
+def _pick_leaf(leaves, seed: int):
+    """Deterministic (leaf index, flat element index) among the float
+    leaves of a flattened tree."""
+    rng = np.random.default_rng(seed)
+    cands = [
+        i for i, leaf in enumerate(leaves)
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.inexact)
+        and leaf.size > 0
+    ]
+    if not cands:
+        raise ValueError("tree has no non-empty float leaves to poison")
+    k = cands[int(rng.integers(len(cands)))]
+    return k, int(rng.integers(leaves[k].size))
+
+
+def poison_tree(tree, value, seed: int = 0):
+    """Set one seed-keyed element of one float leaf to ``value``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    k, idx = _pick_leaf(leaves, seed)
+    leaf = jnp.asarray(leaves[k])
+    flat = leaf.reshape(-1).at[idx].set(
+        jnp.asarray(value, jnp.float32).astype(leaf.dtype)
+    )
+    leaves[k] = flat.reshape(leaf.shape)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def make_grad_fault(kind: str = "nan", seed: int = 0):
+    """A jit-stable gradient-poisoning hook for ``make_train_step``.
+
+    The returned ``hook(grads, batch)`` poisons one seed-keyed element
+    when the (traced) scalar ``batch['inject']`` is nonzero and is the
+    identity otherwise -- the leaf/element choice is host-side static,
+    so one compiled train step serves clean and injected steps and a
+    trajectory can flip faults on per-step from the batch stream.
+    """
+    bad = {"nan": np.nan, "inf": np.inf}[kind]
+
+    def hook(grads, batch):
+        flag = batch.get("inject")
+        if flag is None:
+            return grads
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        k, idx = _pick_leaf(leaves, seed)
+        leaf = jnp.asarray(leaves[k])
+        poisoned = leaf.reshape(-1).at[idx].set(
+            jnp.asarray(bad, jnp.float32).astype(leaf.dtype)
+        ).reshape(leaf.shape)
+        fire = jnp.any(jnp.asarray(flag) > 0)
+        leaves[k] = jnp.where(fire, poisoned, leaf)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return hook
+
+
+@register_fault(
+    "grad_nan", "train",
+    "one gradient element becomes NaN (e.g. 0/0 in a fused loss) -- "
+    "must be preserved through compression's BF16 arm and dropped by "
+    "the optimizer skip-step",
+)
+def inject_grad_nan(grads, seed: int = 0):
+    return poison_tree(grads, np.nan, seed)
+
+
+@register_fault(
+    "grad_inf", "train",
+    "one gradient element overflows to +Inf -- must not poison the "
+    "Alg. 1 group mantissa of clean blocks and must be dropped by the "
+    "optimizer skip-step",
+)
+def inject_grad_inf(grads, seed: int = 0):
+    return poison_tree(grads, np.inf, seed)
+
+
+@register_fault(
+    "payload_bitflip", "pack",
+    "one bit of the fp8 payload lane flips (bus/HBM upset) -- decodes "
+    "to a wrong-but-finite or NaN value; containment is the consumer's "
+    "nonfinite checks (skip-step / quarantine), detection the guard "
+    "counters downstream",
+)
+def inject_payload_bitflip(mo, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    pay = mo.payload_q
+    idx = int(rng.integers(pay.size))
+    bit = np.uint8(1 << int(rng.integers(8)))
+    flat = pay.reshape(-1)
+    flat = flat.at[idx].set(flat[idx] ^ bit)
+    return dataclasses.replace(mo, payload_q=flat.reshape(pay.shape))
+
+
+@register_fault(
+    "scale_corrupt", "pack",
+    "one per-block GAM scale becomes NaN (corrupted scale buffer) -- "
+    "every element of that block decodes nonfinite. (An *Inf* scale "
+    "would decode to silent zeros -- dequant divides by the scale -- "
+    "which no finiteness guard can see; catching that class needs "
+    "payload checksums, out of scope here.)",
+)
+def inject_scale_corrupt(mo, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    sc = mo.scales
+    idx = int(rng.integers(sc.size))
+    flat = sc.reshape(-1).at[idx].set(jnp.float32(np.nan))
+    return dataclasses.replace(mo, scales=flat.reshape(sc.shape))
+
+
+@register_fault(
+    "micro_scale_corrupt", "pack",
+    "one NVFP4 micro-scale byte becomes 0xFF (an E4M3 NaN bit "
+    "pattern) -- the micro-group decodes NaN",
+)
+def inject_micro_scale_corrupt(mo, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    ms = mo.micro_scales
+    if ms.size == 0:
+        raise ValueError("operand has no micro-scale lane to corrupt")
+    idx = int(rng.integers(ms.size))
+    flat = ms.reshape(-1).at[idx].set(jnp.uint8(0xFF))
+    return dataclasses.replace(mo, micro_scales=flat.reshape(ms.shape))
+
+
+@register_fault(
+    "stale_amax", "quant",
+    "the group amax driving the scales is a stale history value that "
+    "under-covers the live tensor -- the saturating cast would "
+    "silently clip; the bounded re-encode retry must widen or fall "
+    "back to BF16 with GUARD_STALE_SCALE",
+)
+def inject_stale_amax(amax, seed: int = 0, shrink: float = 8.0):
+    del seed  # the staleness factor is the whole fault
+    return jnp.asarray(amax, jnp.float32) / jnp.float32(shrink)
+
+
+@register_fault(
+    "kv_page_trash", "serve",
+    "a live KV page's lanes are overwritten with garbage (NaN floats, "
+    "0xFF payload bytes = fp8 NaN) -- the owning slot's decode emits "
+    "nonfinite logits and must be quarantined without perturbing any "
+    "other slot's tokens",
+)
+def inject_kv_page_trash(pool, page: int, seed: int = 0):
+    """Host-side, in-place on the pool's leaves (mirrors how the engine
+    owns its pool). Integer tag lanes are left alone: the fault models
+    data corruption the *guard* must catch, not an impossible tag."""
+    del seed  # whole-page trash: position within the page is moot
+    for i, (key, paged) in enumerate(zip(pool._keys, pool._paged)):
+        if not paged:
+            continue
+        leaf = pool._leaves[i]
+        if jnp.issubdtype(leaf.dtype, jnp.inexact):
+            bad = jnp.asarray(np.nan, jnp.float32).astype(leaf.dtype)
+        elif leaf.dtype == jnp.uint8:
+            bad = jnp.uint8(0xFF)
+        else:
+            continue
+        pool._leaves[i] = leaf.at[:, page].set(bad)

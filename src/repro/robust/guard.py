@@ -1,0 +1,187 @@
+"""Nonfinite containment: the guard policy and its escalation ladder.
+
+The detection signals are free: every quantization event already
+computes a group amax and per-block error sums, and a NaN/Inf element
+forces both nonfinite (max/sum propagate). ``repro.core.mor`` turns
+them into the layout-v4 stats guard lanes ([12] guard_flags,
+[13] fallback_count) with scalar/block-grid arithmetic only -- the
+'robust_guard_event' analysis contract asserts the clean path lowers
+to zero additional operand-sized HLO passes.
+
+Containment escalates through four rungs (docs/robustness.md):
+
+1. **Block BF16 fallback** (structural, always on): the sub-tensor
+   selection's error comparisons route a poisoned block to the BF16
+   arm -- NaN compares False against every fp8 candidate and an Inf
+   error sum exceeds any acceptance gate -- so the original bytes
+   (poison included) are preserved verbatim instead of being laundered
+   through a saturating fp8 cast.
+2. **Tensor BF16 fallback** (structural, always on): the tensor-level
+   recipe's global accept test ``err < threshold`` is False for a
+   nonfinite error, degrading the whole event to passthrough.
+3. **Skip-step** (``GuardPolicy.skip_nonfinite_updates``): a nonfinite
+   global grad norm makes :func:`repro.optim.adamw.adamw_update` keep
+   master weights, both Adam moments (packed lanes bit-exact) and the
+   step counter, and ``train_step`` keep the EF residuals -- the
+   poisoned update is dropped whole, with no EF double-count.
+4. **Bounded re-encode retry** (:func:`requantize_with_backoff`): a
+   delayed/stale scale that under-covers the operand is widened
+   through ``max_requant_retries`` amax doublings; if the ladder still
+   cannot cover, the event falls back to BF16 and flags
+   ``GUARD_STALE_SCALE``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import E4M3, FormatSpec, cast_to_format
+from repro.core.gam import exp2i
+from repro.core.mor import (
+    EVENT_GEMM,
+    GUARD_NONFINITE_AMAX,
+    GUARD_STALE_SCALE,
+    STAT_AMAX,
+    STAT_DECISION,
+    STAT_EVENT_KIND,
+    STAT_FRAC_BF16,
+    STAT_FRAC_E4M3,
+    STAT_GROUP_MANTISSA,
+    STAT_GUARD_FLAGS,
+    STAT_PAYLOAD_BPE,
+    STATS_WIDTH,
+)
+
+__all__ = [
+    "GuardPolicy",
+    "guard_flag_set",
+    "tree_select",
+    "requantize_with_backoff",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    """Configuration for the optimizer-level rungs of the ladder.
+
+    Rungs 1-2 (block/tensor BF16 fallback) are structural properties of
+    the selection math and are always on; this policy only governs what
+    the training step does when poison reaches the update.
+    """
+
+    # Rung 3: drop a whole optimizer update when the (already computed)
+    # global grad norm is nonfinite, preserving master weights, packed
+    # moments, EF residuals and the step counter bit-exactly.
+    skip_nonfinite_updates: bool = True
+    # Rung 4: amax doublings requantize_with_backoff may spend before
+    # declaring a stale scale unrecoverable and falling back to BF16.
+    max_requant_retries: int = 2
+
+
+def guard_flag_set(guard_flags, flag) -> jnp.ndarray:
+    """True where the power-of-two ``flag`` is set in a guard_flags
+    lane value (flags are sums of distinct powers of two, stored f32).
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core.mor import GUARD_NONFINITE_AMAX, GUARD_BLOCK_FALLBACK
+    >>> bool(guard_flag_set(jnp.float32(3.0), GUARD_BLOCK_FALLBACK))
+    True
+    >>> bool(guard_flag_set(jnp.float32(4.0), GUARD_NONFINITE_AMAX))
+    False
+    """
+    f = jnp.asarray(guard_flags, jnp.float32)
+    return jnp.mod(jnp.floor_divide(f, jnp.float32(flag)), 2.0) >= 1.0
+
+
+def tree_select(ok, new_tree, old_tree):
+    """Per-leaf ``where(ok, new, old)`` over two same-structure trees.
+
+    ``ok`` is a scalar bool. ``select`` picks *values*, so NaN/Inf in
+    the untaken branch never propagates -- the skip-step rung relies on
+    this to return a bit-exact old state (uint8/nibble payload lanes
+    included) when an update is dropped.
+    """
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(ok, n, o.astype(n.dtype)), new_tree, old_tree
+    )
+
+
+def requantize_with_backoff(
+    x2d: jnp.ndarray,
+    stale_amax,
+    *,
+    fmt: FormatSpec = E4M3,
+    max_retries: int = 2,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Rung 4: encode under a delayed (possibly stale) amax, with a
+    bounded widening retry collapsed into one pass.
+
+    Delayed scaling (the ROADMAP item this rung is the safety net for)
+    derives the tensor scale ``s = fmt.amax / stale_amax`` from a
+    *previous* step's statistics; when the live tensor has outgrown the
+    stale amax, the saturating cast silently clips its tail. Instead of
+    re-encoding up to ``max_retries`` times, the ladder of candidate
+    amaxes ``stale_amax * 2**[0..max_retries]`` is evaluated against
+    the true amax with scalar arithmetic only, and the single encode
+    runs at the smallest covering rung. If even the widest rung cannot
+    cover (or the operand is nonfinite), the event falls back to BF16
+    passthrough and flags ``GUARD_STALE_SCALE``.
+
+    Returns ``(y, stats, attempts)``: the fake-quantized (or
+    passthrough) f32 tensor, a layout-v4 stats row, and the number of
+    doublings spent (0 = the stale amax still covered; ``max_retries``
+    on fallback).
+
+    >>> import jax.numpy as jnp
+    >>> x = jnp.linspace(-1.0, 1.0, 64).reshape(8, 8)
+    >>> y, stats, attempts = requantize_with_backoff(x, jnp.float32(1.0))
+    >>> int(attempts)       # fresh amax covers: no retry
+    0
+    >>> y, stats, attempts = requantize_with_backoff(x, jnp.float32(0.3))
+    >>> int(attempts)       # 0.3 -> 0.6 -> 1.2 covers amax 1.0
+    2
+    """
+    xf = x2d.astype(jnp.float32)
+    true_amax = jnp.max(jnp.abs(xf))
+    stale = jnp.asarray(stale_amax, jnp.float32)
+    ladder = stale * exp2i(jnp.arange(max_retries + 1, dtype=jnp.int32))
+    covered = ladder >= true_amax
+    recoverable = (
+        jnp.any(covered) & jnp.isfinite(true_amax)
+        & jnp.isfinite(stale) & (stale > 0)
+    )
+    # First covering rung (argmax of the monotone mask); pinned to the
+    # top rung when nothing covers so `attempts` reports the full spend.
+    attempts = jnp.where(
+        recoverable,
+        jnp.argmax(covered).astype(jnp.int32),
+        jnp.int32(max_retries),
+    )
+    eff_amax = jnp.where(recoverable, ladder[attempts], jnp.float32(1.0))
+    s = fmt.amax / eff_amax
+    y = jnp.where(recoverable, cast_to_format(xf * s, fmt) / s, xf)
+
+    # A nonfinite *stale* amax is a corrupted scale buffer, not mere
+    # staleness -- flag it like nonfinite data so the two failure modes
+    # stay distinguishable from a plain out-of-range event.
+    amax_ok = jnp.isfinite(true_amax) & jnp.isfinite(stale)
+    flags = (
+        jnp.where(amax_ok, 0.0, GUARD_NONFINITE_AMAX)
+        + jnp.where(recoverable, 0.0, GUARD_STALE_SCALE)
+    )
+    okf = recoverable.astype(jnp.float32)
+    stats = (
+        jnp.zeros((STATS_WIDTH,), jnp.float32)
+        .at[STAT_DECISION].set(okf)
+        .at[STAT_AMAX].set(true_amax)
+        .at[STAT_FRAC_E4M3].set(okf)
+        .at[STAT_FRAC_BF16].set(1.0 - okf)
+        .at[STAT_GROUP_MANTISSA].set(1.0)
+        .at[STAT_EVENT_KIND].set(EVENT_GEMM)
+        .at[STAT_PAYLOAD_BPE].set(okf + 2.0 * (1.0 - okf))
+        .at[STAT_GUARD_FLAGS].set(flags)
+    )
+    return y, stats, attempts

@@ -97,6 +97,13 @@ class ServeConfig:
     # 'truncate' keeps the first max_seq - 1 tokens and records the
     # truncation on request.error.
     on_long_prompt: str = "reject"
+    # Robustness tier (docs/robustness.md): also run the pool's
+    # KV-page guard over each decoding slot every decode step --
+    # host-side finiteness checks of the float/scale lanes, so
+    # corrupted pages quarantine the owning slot *before* the poison
+    # reaches its logits. Off by default: the nonfinite-logits
+    # quarantine below is free, this sweep fetches page lanes.
+    kv_guard: bool = False
 
 
 class Engine:
@@ -196,6 +203,12 @@ class Engine:
         self.slot_filled = np.zeros(n, np.int32)  # prompt tokens consumed
         self.queue: Deque[Request] = collections.deque()
         self.unfinished: List[Request] = []
+        # Graceful degradation (docs/robustness.md): requests finished
+        # early because their slot produced nonfinite logits or failed
+        # the KV-page guard, and requests rejected at admission because
+        # their worst-case page reservation can never be satisfied.
+        self.quarantined: List[Request] = []
+        self.rejected: List[Request] = []
         self.steps = 0
         self.decode_steps = 0
         self.prefill_chunks = 0
@@ -240,9 +253,30 @@ class Engine:
         # mid-flight when the pool is oversubscribed.
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         for slot in free:
-            if not self.queue:
+            req = None
+            while self.queue and req is None:
+                head = self.queue[0]
+                need = self.pool.pages_for(self._horizon(head))
+                if need > self.pool.n_pages:
+                    # No amount of eviction can ever free enough pages:
+                    # waiting on this head would starve the whole queue
+                    # behind an unsatisfiable reservation. Reject it
+                    # with the condition surfaced, like submit-side
+                    # truncation.
+                    self.queue.popleft()
+                    head.error = (
+                        f"rejected at admission: worst-case reservation "
+                        f"of {need} pages exceeds the pool's "
+                        f"{self.pool.n_pages} total pages (page_size="
+                        f"{self.pool.page_size}); shrink the prompt or "
+                        "max_tokens, or grow pool_pages"
+                    )
+                    head.done = True
+                    self.rejected.append(head)
+                    continue
+                req = head
+            if req is None:
                 return
-            req = self.queue[0]
             if not self.pool.alloc(slot, self._horizon(req)):
                 return  # wait for evictions to refill the free list
             self.queue.popleft()
@@ -346,6 +380,30 @@ class Engine:
         rows = np.asarray(logits[:, 0], np.float32)
         for i in dec:
             r = self.slot_req[i]
+            # Slot quarantine (docs/robustness.md): the logits row is
+            # already on the host for sampling, so the finiteness check
+            # is free; a poisoned slot (corrupted KV page, overflowed
+            # cache lane) finishes early with the condition surfaced
+            # instead of sampling garbage forever. Decode rows are
+            # slot-independent (each attends only over its own pages),
+            # so every other slot's tokens are unaffected. The optional
+            # page sweep runs *first*: when both would fire, the error
+            # should name the corrupted page (the root cause), not the
+            # nonfinite logits downstream of it -- and it also catches
+            # corruption in reserved-but-not-yet-attended pages the
+            # logits cannot see yet.
+            if self.scfg.kv_guard:
+                bad = self.pool.guard_check(i)
+                if bad is not None:
+                    self._quarantine(i, bad)
+                    continue
+            if not np.isfinite(rows[i][: self.cfg.vocab]).all():
+                self._quarantine(
+                    i,
+                    f"nonfinite logits at position "
+                    f"{int(self.slot_pos[i])}",
+                )
+                continue
             tok = self._sample(r, rows[i])
             r.out.append(tok)
             self.slot_pos[i] += 1
@@ -375,6 +433,17 @@ class Engine:
         p = np.exp(z)
         p /= p.sum()
         return int(rng.choice(V, p=p))
+
+    def _quarantine(self, slot: int, reason: str):
+        """Finish a poisoned slot early: surface the condition on
+        ``req.error``, keep whatever tokens were already emitted, and
+        release the pages back to the free list via the normal finish
+        path (so queued requests can take the slot next tick)."""
+        req = self.slot_req[slot]
+        note = f"quarantined: {reason}"
+        req.error = f"{req.error}; {note}" if req.error else note
+        self.quarantined.append(req)
+        self._finish(slot)
 
     def _finish(self, slot: int):
         self.slot_req[slot].done = True

@@ -304,6 +304,30 @@ class PagedKVPool:
         return len(pages)
 
     # ----------------------------------------------------- inspection --
+    def guard_check(self, slot: int) -> Optional[str]:
+        """KV-page guard (docs/robustness.md): host-side finiteness
+        sweep over ``slot``'s owned pages. Float lanes (bf16/fp8 KV,
+        MoR scale grids) must be finite everywhere -- unwritten
+        positions are zero-initialized, so any NaN/Inf is corruption,
+        not staleness. Returns a surfaced-error string, or None when
+        the pages are clean. Cost is a per-slot page fetch; the engine
+        gates it behind ``ServeConfig.kv_guard``."""
+        pages = self._owned[slot]
+        if not pages:
+            return None
+        idx = np.asarray(pages, np.int32)
+        for key, leaf, paged in zip(self._keys, self._leaves,
+                                    self._paged):
+            if not paged or not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                continue
+            vals = np.asarray(leaf[:, idx].astype(jnp.float32))
+            if not np.isfinite(vals).all():
+                return (
+                    f"KV-page guard: nonfinite values in lane {key!r} "
+                    f"of slot {slot}'s pages"
+                )
+        return None
+
     def bytes_per_token(self) -> int:
         """Physical pool bytes moved per cache position by one gather +
         scatter round trip, summed over paged leaves and units -- a
@@ -320,8 +344,9 @@ class PagedKVPool:
 
     def kv_cache_stats(self) -> Dict[str, float]:
         """Host-side tag census over written rows of owned pages: tag
-        fractions, logical payload bytes per element, and a v2-layout
-        stats row (models.attention.kv_stats_row semantics)."""
+        fractions, logical payload bytes per element, and a
+        STATS_WIDTH stats row (models.attention.kv_stats_row
+        semantics)."""
         from repro.models.attention import kv_bytes_per_element
         from repro.models.attention import kv_stats_row as _row
 

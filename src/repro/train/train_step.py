@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import STATS_WIDTH, MoRDotPolicy, MoRPolicy, with_mesh_axes
+from repro.core.mor import STAT_FALLBACK_COUNT, STAT_GUARD_FLAGS
 from repro.models import make_loss_fn, make_tokens
 from repro.models.common import constrain
 from repro.optim.adamw import (
@@ -24,6 +25,7 @@ from repro.optim.adamw import (
 )
 from repro.optim.compress import DEFAULT_GRAD_POLICY
 from repro.optim.moments import MomentPolicy
+from repro.robust.guard import GuardPolicy, tree_select
 from repro.sharding import rules as _rules
 
 __all__ = ["TrainConfig", "make_train_step", "summarize_mor_stats"]
@@ -60,6 +62,13 @@ class TrainConfig:
     # compiler already makes jnp reductions over sharded operands
     # global, so no explicit collectives are needed.
     mor_mesh_axes: Tuple[str, ...] = ()
+    # Numerics guard rails (docs/robustness.md): with a GuardPolicy,
+    # adamw_update drops updates whose global grad norm is nonfinite
+    # (master/moments/step preserved bit-exactly) and this step keeps
+    # the EF residuals of the skipped update -- a dropped step must not
+    # absorb its own quantization error into EF (no double count).
+    # None keeps the unguarded behavior.
+    guard: GuardPolicy | None = None
 
 
 def summarize_mor_stats(
@@ -73,11 +82,17 @@ def summarize_mor_stats(
     toward 1 even when every *enabled* event quantized. With no enabled
     events at all, every metric is 0.
 
-    ``opt_stats`` carries the optimizer-event rows (stats layout v3,
+    ``opt_stats`` carries the optimizer-event rows (stats layout v4,
     event_kind > 0): gradient-compression and packed-moment encode
     events, summarized into the ``opt_*`` family the same way --
     ``opt_frac_bf16``/``opt_rel_err`` plus ``opt_payload_bpe`` (mean
     stats lane [11], the logical bytes/param of the compressed state).
+
+    Guard counters (docs/robustness.md) aggregate over *every* row,
+    disabled events included (a passthrough event can still carry a
+    poisoned operand worth reporting): ``guard_flag_events`` counts
+    rows with any guard flag set, ``guard_fallback_blocks`` sums the
+    nonfinite-block fallback counts.
     """
 
     def rows(tree):
@@ -99,19 +114,36 @@ def summarize_mor_stats(
         return jnp.sum(jnp.where(enabled, cat[:, idx], 0.0)) / n
 
     out = {}
+    guard_events = jnp.float32(0.0)
+    fallback_blocks = jnp.float32(0.0)
+
+    def guard_tally(cat):
+        nonlocal guard_events, fallback_blocks
+        if cat is None:
+            return
+        guard_events += jnp.sum(
+            (cat[:, STAT_GUARD_FLAGS] > 0.0).astype(jnp.float32)
+        )
+        fallback_blocks += jnp.sum(cat[:, STAT_FALLBACK_COUNT])
+
     if fwd_stats is not None:
         cat = rows(fwd_stats)
         out["fwd_frac_bf16"] = frac(cat, 5)
         out["fwd_rel_err"] = frac(cat, 1)
+        guard_tally(cat)
     if bwd_stats is not None:
         cat = rows(bwd_stats)
         out["bwd_frac_bf16"] = frac(cat, 5)
         out["bwd_rel_err"] = frac(cat, 1)
+        guard_tally(cat)
     if opt_stats is not None:
         cat = rows(opt_stats)
         out["opt_frac_bf16"] = frac(cat, 5)
         out["opt_rel_err"] = frac(cat, 1)
         out["opt_payload_bpe"] = frac(cat, 11)
+        guard_tally(cat)
+    out["guard_flag_events"] = guard_events
+    out["guard_fallback_blocks"] = fallback_blocks
     return out
 
 
@@ -119,9 +151,18 @@ def make_train_step(
     cfg: ArchConfig,
     policy: MoRDotPolicy,
     tcfg: TrainConfig,
+    grad_fault=None,
 ):
     """Returns train_step(params, opt_state, batch) ->
-    (params, opt_state, metrics)."""
+    (params, opt_state, metrics).
+
+    ``grad_fault``: optional ``hook(grads, batch) -> grads`` applied to
+    the accumulated gradients *before* compression -- the chaos
+    harness's injection point (repro.robust.faults.make_grad_fault
+    builds hooks gated on a ``batch['inject']`` flag, so one compiled
+    step serves clean and injected steps). Production steps leave it
+    None; the hook must be the identity for clean batches or the
+    differential chaos assertions are meaningless."""
     if tcfg.mor_mesh_axes:
         policy = with_mesh_axes(policy, tcfg.mor_mesh_axes)
     loss_fn = make_loss_fn(
@@ -200,6 +241,9 @@ def make_train_step(
             )
             g_params = to_zero2(g_params)
 
+        if grad_fault is not None:
+            g_params = grad_fault(g_params, batch)
+
         grad_stats = None
         new_ef = opt_state.ef
         if tcfg.compress_grads != "none":
@@ -209,10 +253,19 @@ def make_train_step(
             )
 
         new_params, new_opt, opt_metrics = adamw_update(
-            tcfg.optimizer, g_params, opt_state, moments=tcfg.moments
+            tcfg.optimizer, g_params, opt_state, moments=tcfg.moments,
+            guard=tcfg.guard,
         )
+        if "guard_skip" in opt_metrics and new_ef is not None:
+            # Skip-step EF preservation: compress_grads already folded
+            # this step's residual into `corrected` and re-split it; if
+            # the update is dropped, keeping the new residual would
+            # make the *next* step absorb this step's quantization
+            # error twice. Select the old residuals back (bit-exact).
+            ok = opt_metrics["guard_skip"] < 0.5
+            new_ef = tree_select(ok, new_ef, opt_state.ef)
         new_opt = new_opt._replace(ef=new_ef)
-        # Optimizer-event rows (stats v3): gradient-compression events
+        # Optimizer-event rows (stats v4): gradient-compression events
         # plus the packed-moment encode events adamw_update reports.
         opt_rows = {
             "grad": grad_stats,

@@ -166,6 +166,51 @@ def test_mor005_clock_outside_jit_clean():
     assert vs == []
 
 
+# ------------------------------------------------------- AST: MOR006 --
+_KERNEL_BODY = """
+    def _select_kernel(x_ref, o_ref, amax_ref):
+        assert x_ref.shape[0] == 128
+        o_ref[...] = x_ref[...]
+"""
+
+
+def test_mor006_kernel_body_assert_fires():
+    vs = _lint(_KERNEL_BODY, "src/repro/kernels/mor_select.py")
+    assert _rules_hit(vs) == ["MOR006"]
+
+
+def test_mor006_launcher_assert_is_mor002_territory():
+    # One *_ref param (or none) is a launcher/helper, not a kernel
+    # body: MOR002's kernel-dir exemption applies, MOR006 stays quiet.
+    src = """
+        def launch(x, o_ref):
+            assert x.ndim == 2
+            return x
+    """
+    assert _lint(src, "src/repro/kernels/mor_select.py") == []
+
+
+def test_mor006_scoped_to_kernels_dir():
+    # Outside the kernels dir the same source is MOR002's problem
+    # (plain bare-assert rule), never MOR006's.
+    hits = _rules_hit(_lint(_KERNEL_BODY, "src/repro/train/train_step.py"))
+    assert hits == ["MOR002"]
+    assert _lint(_KERNEL_BODY, "tests/test_foo.py") == []
+
+
+def test_mor006_nested_defs_not_attributed_to_kernel():
+    # An assert inside a *nested* non-kernel function must not be
+    # blamed on the enclosing kernel body.
+    src = """
+        def _kern(x_ref, o_ref):
+            def helper(v):
+                assert v > 0
+                return v
+            o_ref[...] = x_ref[...]
+    """
+    assert _lint(src, "src/repro/kernels/mor_select.py") == []
+
+
 # ------------------------------------------------------- allowlists --
 def test_inline_allow_suppresses():
     vs = _lint("seed = hash(n)  # lint: allow(MOR001) fixture\n")

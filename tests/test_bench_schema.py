@@ -71,19 +71,20 @@ def test_known_versions_accepted_unknown_rejected():
     versions stay hard errors."""
     from benchmarks.schema import (
         SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4, SCHEMA_V5,
+        SCHEMA_V6,
     )
 
     doc = make_artifact(GOOD_CSV)
-    assert doc["schema"] == SCHEMA_V5
+    assert doc["schema"] == SCHEMA_V6
     validate_artifact(doc)
-    for old in (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4):
+    for old in (SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4, SCHEMA_V5):
         prev = copy.deepcopy(doc)
         prev["schema"] = old
         validate_artifact(prev)
-    v6 = copy.deepcopy(doc)
-    v6["schema"] = "repro.bench_kernels/v6"
+    v7 = copy.deepcopy(doc)
+    v7["schema"] = "repro.bench_kernels/v7"
     with pytest.raises(ValueError, match="schema mismatch"):
-        validate_artifact(v6)
+        validate_artifact(v7)
 
 
 def test_serve_kv_cache_row_names_fit_grammar():

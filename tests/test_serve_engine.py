@@ -454,3 +454,44 @@ def test_decode_step_contract(dense_model):
     assert report.ok, report.render()
     assert report.counters["donated_args"] >= 1
     assert report.counters["tainted_lanes"] > 0  # QTensor lanes seeded
+
+
+# ---------------------------------------- unsatisfiable admission --
+def test_unsatisfiable_reservation_rejected_not_starved(dense_model):
+    """A request whose worst-case reservation exceeds the *total* pool
+    can never be admitted -- no amount of eviction frees enough pages.
+    Pre-fix, it sat at the queue head forever and starved everything
+    behind it; now it is rejected with the condition surfaced and the
+    queue behind it drains normally."""
+    cfg, params = dense_model
+    # 3-page pool (24 positions), oversubscribed vs max_seq = 64.
+    eng = Engine(cfg, TENSOR_MOR, params,
+                 ServeConfig(slots=2, max_seq=64, page_size=8,
+                             prefill_chunk=8, pool_pages=3))
+    hog = Request(0, np.arange(16, dtype=np.int32) % cfg.vocab,
+                  max_tokens=30)   # horizon 45 -> 6 pages > 3
+    small = Request(1, np.arange(5, dtype=np.int32) % cfg.vocab,
+                    max_tokens=4)  # horizon 8 -> 1 page
+    eng.submit(hog)
+    eng.submit(small)
+    eng.run_to_completion()
+    assert hog.done and not hog.out
+    assert hog.error and "rejected at admission" in hog.error
+    assert "6 pages" in hog.error and "3 total" in hog.error
+    assert hog in eng.rejected
+    assert small.done and small.error is None and len(small.out) == 4
+
+
+def test_exact_fit_reservation_admitted(dense_model):
+    """Boundary: a reservation of exactly the pool's total page count
+    is satisfiable (once the pool drains) and must not be rejected."""
+    cfg, params = dense_model
+    eng = Engine(cfg, TENSOR_MOR, params,
+                 ServeConfig(slots=2, max_seq=64, page_size=8,
+                             prefill_chunk=8, pool_pages=3))
+    fit = Request(0, np.arange(16, dtype=np.int32) % cfg.vocab,
+                  max_tokens=9)    # horizon 24 -> exactly 3 pages
+    eng.submit(fit)
+    eng.run_to_completion()
+    assert fit.done and fit.error is None and len(fit.out) == 9
+    assert not eng.rejected

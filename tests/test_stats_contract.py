@@ -1,4 +1,4 @@
-"""Stats-vector contract guards (layout v3, STATS_WIDTH = 12).
+"""Stats-vector contract guards (layout v4, STATS_WIDTH = 14).
 
 Four families:
 
@@ -8,10 +8,13 @@ Four families:
   summarizer, the model token channel behind serve/engine and
   launch/dryrun, the QTensor serving stats) instead of silently
   dropping or misreading rows.
-* **v3 lanes** -- [10] event_kind (EVENT_GEMM/GRAD/MOMENT_M/MOMENT_V)
+* **v3/v4 lanes** -- [10] event_kind (EVENT_GEMM/GRAD/MOMENT_M/MOMENT_V)
   and [11] payload bytes/element implied by the tag mixture; every
   producer stamps them consistently (GEMM events default to kind 0,
   optimizer events re-stamp; 'off' rows report the bf16 2.0 B/elt).
+  The v4 guard lanes [12] guard_flags / [13] fallback_count are pinned
+  by the chaos suite (tests/test_robust_chaos.py): flagged on
+  nonfinite operands, identically zero on the clean path.
 * **Disabled-event filtering** -- recipe='off' rows carry the -1.0
   decision sentinel and must not dilute the aggregated fractions.
 * **grad_accum invariance** -- reported fwd_*/bwd_* metrics must be
@@ -186,10 +189,25 @@ def test_summarize_opt_rows():
                               {"g": jnp.asarray(rows),
                                "off": jnp.asarray(off)})
     assert set(out) == {"opt_frac_bf16", "opt_rel_err",
-                        "opt_payload_bpe"}
+                        "opt_payload_bpe", "guard_flag_events",
+                        "guard_fallback_blocks"}
     assert float(out["opt_frac_bf16"]) == pytest.approx(0.25)
     assert float(out["opt_rel_err"]) == pytest.approx(0.02)
     assert float(out["opt_payload_bpe"]) == pytest.approx(1.25)
+    # Clean rows: the v4 guard counters ride along at zero.
+    assert float(out["guard_flag_events"]) == 0.0
+    assert float(out["guard_fallback_blocks"]) == 0.0
+
+    # Guard lanes tally over *every* row, disabled sentinels included
+    # (a passthrough event can still report a poisoned operand).
+    rows[1, 12] = 2.0   # GUARD_BLOCK_FALLBACK
+    rows[1, 13] = 3.0
+    off[0, 12] = 1.0    # flagged on a disabled row still counts
+    out = summarize_mor_stats(None, None,
+                              {"g": jnp.asarray(rows),
+                               "off": jnp.asarray(off)})
+    assert float(out["guard_flag_events"]) == 2.0
+    assert float(out["guard_fallback_blocks"]) == 3.0
 
 
 def test_summarize_all_disabled_is_zero():
